@@ -1,0 +1,135 @@
+"""Shared benchmark utilities: datasets (paper §7.3), timing, cost models.
+
+Two time axes are reported for every sketch:
+  * measured_us — wall-clock of the jitted apply on THIS host (CPU XLA);
+    real, comparable *between families*, but not TPU time;
+  * modeled_us  — idealized TPU v5e time from the family's cost model
+    (max of compute/memory terms), the number the roofline section uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.variants import SketchBase, make_sketch
+from repro.roofline import hw
+
+
+# ---------------------------------------------------------------------------
+# datasets (paper §7.3: gaussian, low-rank+noise, sparse, LLM weights)
+# ---------------------------------------------------------------------------
+
+def make_dataset(name: str, d: int, n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if name == "gaussian":
+        return rng.normal(size=(d, n)).astype(np.float32)
+    if name == "lowrank_noise":
+        r = max(4, n // 16)
+        U = rng.normal(size=(d, r)).astype(np.float32)
+        V = rng.normal(size=(r, n)).astype(np.float32)
+        return (U @ V / np.sqrt(r) + 0.1 * rng.normal(size=(d, n))).astype(np.float32)
+    if name == "sparse":
+        # SuiteSparse spal_004-like: ~1.4% density
+        A = rng.normal(size=(d, n)).astype(np.float32)
+        mask = rng.random(size=(d, n)) < 0.014
+        return (A * mask).astype(np.float32)
+    if name == "llm_weights":
+        # stacked-transformer-weight-like: block-wise scale variation +
+        # mild low-rank structure (GPT2/Qwen2 stacked weights in the paper)
+        blocks = []
+        b = max(1, d // 16)
+        for i in range(0, d, b):
+            scale = 0.5 + 1.5 * rng.random()
+            r = max(2, n // 8)
+            U = rng.normal(size=(min(b, d - i), r)).astype(np.float32)
+            V = rng.normal(size=(r, n)).astype(np.float32)
+            W = scale * (0.7 * U @ V / np.sqrt(r)
+                         + 0.3 * rng.normal(size=(min(b, d - i), n)))
+            blocks.append(W.astype(np.float32))
+        return np.concatenate(blocks, axis=0)
+    raise KeyError(name)
+
+
+DATASETS = ("gaussian", "lowrank_noise", "sparse", "llm_weights")
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time (seconds) of a jitted fn."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def modeled_tpu_us(sk: SketchBase, n: int) -> float:
+    cm = sk.cost_model(n)
+    t_compute = cm.flops / hw.PEAK_FLOPS_BF16
+    t_memory = cm.hbm_bytes / hw.HBM_BW
+    return 1e6 * max(t_compute, t_memory)
+
+
+@dataclasses.dataclass
+class BenchRow:
+    task: str
+    dataset: str
+    family: str
+    d: int
+    n: int
+    k: int
+    params: str
+    measured_us: float
+    modeled_us: float
+    quality: float
+    quality_metric: str
+
+    def csv(self) -> str:
+        return (f"{self.task},{self.dataset},{self.family},{self.d},{self.n},"
+                f"{self.k},{self.params},{self.measured_us:.1f},"
+                f"{self.modeled_us:.2f},{self.quality:.6g},{self.quality_metric}")
+
+
+CSV_HEADER = ("task,dataset,family,d,n,k,params,measured_us,modeled_us,"
+              "quality,quality_metric")
+
+
+# Table-1 baseline set (paper §7.1): dense Gaussian (cuBLAS), SJLT
+# (cuSPARSE/GraSS-kernel semantics), subsampled FHT.  localized (κ=1) and
+# FLASHBLOCKROW are appendix variants — plotted, but not Table-1 baselines.
+PAPER_BASELINES = ("dense_gaussian", "sjlt", "srht")
+
+
+def default_families(seed: int = 0):
+    """The paper's comparison set (§7.1) + ours (κ tuned on the Pareto
+    frontier, as the paper does) + appendix variants."""
+    return [
+        ("dense_gaussian", {}),
+        ("sjlt", {"s": 8}),
+        ("srht", {}),
+        ("blockperm", {"kappa": 4, "s": 2}),
+        ("blockperm", {"kappa": 2, "s": 2}),
+        ("localized", {"s": 2}),
+        ("blockrow", {"kappa": 4, "s": 2}),
+    ]
+
+
+def build_sketch(family: str, d: int, k: int, seed: int, kwargs: Dict):
+    return make_sketch(family, d, k, seed=seed, **kwargs)
+
+
+def jit_apply(sk: SketchBase):
+    return jax.jit(lambda A: sk.apply(A))

@@ -1,0 +1,30 @@
+"""Fig. 4 analogue: end-to-end GraSS — LDS vs per-sample sketch time,
+across sketch families × k (paper App. E: MLP, sketch 4k -> k)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.attribution.grass import GrassPipelineConfig, run_grass_lds
+from repro.attribution.mlp import MLPConfig
+
+
+def grass_rows(scale: str = "smoke") -> List[str]:
+    if scale == "full":
+        mcfg = MLPConfig(d_in=784, hidden=(256, 256), steps=120)
+        n_train, n_test, m = 1024, 32, 50
+        sparse, ks = 4096, (1024, 2048)
+    else:
+        mcfg = MLPConfig(d_in=128, hidden=(32, 32), steps=80)
+        n_train, n_test, m = 256, 24, 24
+        sparse, ks = 1024, (256,)
+    rows = []
+    for fam in ("blockperm", "dense_gaussian", "sjlt", "srht", "blockrow"):
+        for k in ks:
+            res = run_grass_lds(
+                GrassPipelineConfig(sparse_dim=sparse, sketch_dim=k,
+                                    sketch_family=fam),
+                mcfg, n_train=n_train, n_test=n_test, m_subsets=m)
+            rows.append(
+                f"grass,{fam},k={k},,,,{res['lds']:.4f},"
+                f"{res['per_sample_us']:.1f},lds_vs_us_per_sample")
+    return rows

@@ -1,0 +1,73 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+
+DRYRUN_DIR = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
+
+HEADER = (
+    "| arch | shape | mesh | compute ms | memory ms | collective ms | "
+    "bottleneck | useful(6ND/HLO) | roofline-frac | mem/dev |\n"
+    "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def load_records() -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: Dict) -> str:
+    if r.get("status") == "skip":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"{r['reason']} | — | — | — |")
+    if r.get("status") == "fail":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"FAIL: {r.get('error','?')[:60]} | — | — | — |")
+    ideal = r["model_flops"] / (r["chips"] * 197e12)
+    step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    frac = ideal / step if step > 0 else 0.0
+    mem = (r["arg_bytes_per_device"] + r["temp_bytes_per_device"]) / 2**30
+    useful = r["model_flops"] / max(r["device_flops"] * r["chips"], 1.0)
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']*1e3:.0f} | {r['memory_s']*1e3:.0f} | "
+            f"{r['collective_s']*1e3:.0f} | {r['bottleneck']} | "
+            f"{useful:.2f} | {frac*100:.0f}% | {mem:.1f} GiB |")
+
+
+def table_markdown(mesh_filter: str = None) -> str:
+    recs = load_records()
+    if mesh_filter:
+        recs = [r for r in recs if r.get("mesh") == mesh_filter]
+    order = {a: i for i, a in enumerate(ARCHS)}
+    shape_order = {s.name: i for i, s in enumerate(SHAPES)}
+    recs.sort(key=lambda r: (order.get(r["arch"], 99),
+                             shape_order.get(r["shape"], 9), r.get("mesh", "")))
+    return HEADER + "\n" + "\n".join(fmt_row(r) for r in recs)
+
+
+def csv_rows() -> List[str]:
+    rows = []
+    for r in load_records():
+        if r.get("status") != "ok":
+            rows.append(f"dryrun,{r['arch']},{r['shape']},{r.get('mesh','')},"
+                        f",,,,{r.get('status')}:{r.get('reason', r.get('error',''))[:40]}")
+            continue
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append(
+            f"dryrun,{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r['compute_s']*1e6:.0f},{r['memory_s']*1e6:.0f},"
+            f"{r['collective_s']*1e6:.0f},{step*1e6:.0f},{r['bottleneck']}")
+    return rows
+
+
+if __name__ == "__main__":
+    print(table_markdown())

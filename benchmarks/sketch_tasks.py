@@ -1,0 +1,130 @@
+"""RandNLA task benchmarks — one per paper table/figure:
+
+  gram    — Fig. 1 / App. F.2   (Gram relative-F error vs time)
+  ose     — App. F.3            (OSE spectral error vs time)
+  ridge   — Fig. 3 / App. F.4   (sketch-and-ridge residual vs time)
+  solve   — App. F.5            (sketch-and-solve LS residual vs time)
+
+Each yields BenchRows across sketch families × k × datasets; the κ/s
+ablations (App. F legends) come from ``ablation_rows``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coherence
+from benchmarks import common
+
+
+def _quality(task: str, A: np.ndarray, SA: np.ndarray, seed: int) -> float:
+    d, n = A.shape
+    if task == "gram":
+        return coherence.gram_rel_error(A, SA)
+    if task == "ose":
+        Q, _ = np.linalg.qr(A)                      # column-space variant
+        return float("nan")                         # handled separately
+    raise KeyError(task)
+
+
+def gram_rows(d: int, n: int, k_values, families, datasets, seed: int = 0
+              ) -> List[common.BenchRow]:
+    rows = []
+    for ds in datasets:
+        A_np = common.make_dataset(ds, d, n, seed)
+        A = jnp.asarray(A_np)
+        for fam, kw in families:
+            for k in k_values:
+                sk = common.build_sketch(fam, d, k, seed, kw)
+                f = common.jit_apply(sk)
+                t = common.time_fn(f, A)
+                SA = np.asarray(f(A))
+                rows.append(common.BenchRow(
+                    "gram", ds, fam, d, n, sk.k, str(kw),
+                    1e6 * t, common.modeled_tpu_us(sk, n),
+                    coherence.gram_rel_error(A_np, SA), "gram_rel_F"))
+    return rows
+
+
+def ose_rows(d: int, n: int, k_values, families, datasets, seed: int = 0,
+             r: int = 32) -> List[common.BenchRow]:
+    rows = []
+    for ds in datasets:
+        A_np = common.make_dataset(ds, d, max(n, r), seed)
+        Q, _ = np.linalg.qr(A_np[:, :r])
+        Qj = jnp.asarray(Q.astype(np.float32))
+        for fam, kw in families:
+            for k in k_values:
+                sk = common.build_sketch(fam, d, k, seed, kw)
+                f = common.jit_apply(sk)
+                t = common.time_fn(f, Qj)
+                SQ = np.asarray(f(Qj))
+                rows.append(common.BenchRow(
+                    "ose", ds, fam, d, n, sk.k, str(kw),
+                    1e6 * t, common.modeled_tpu_us(sk, r),
+                    coherence.ose_spectral_error(Q, SQ), "ose_spectral"))
+    return rows
+
+
+def _ridge_solve(A, b, S_apply, lam: float):
+    """x = argmin ‖S A x − S b‖² + λ‖x‖²  then residual ‖Ax−b‖/‖b‖."""
+    SA = S_apply(A)
+    Sb = S_apply(b[:, None])[:, 0]
+    n = SA.shape[1]
+    G = SA.T @ SA + lam * jnp.eye(n)
+    x = jnp.linalg.solve(G, SA.T @ Sb)
+    res = jnp.linalg.norm(A @ x - b) / jnp.maximum(jnp.linalg.norm(b), 1e-12)
+    return x, res
+
+
+def ridge_rows(d: int, n: int, k_values, families, datasets, seed: int = 0,
+               lam: float = 1e-2, task: str = "ridge") -> List[common.BenchRow]:
+    rows = []
+    eff_lam = lam if task == "ridge" else 0.0
+    for ds in datasets:
+        A_np = common.make_dataset(ds, d, n, seed)
+        rng = np.random.default_rng(seed + 1)
+        x_true = rng.normal(size=(n,)).astype(np.float32)
+        b_np = A_np @ x_true + 0.01 * rng.normal(size=(d,)).astype(np.float32)
+        A = jnp.asarray(A_np)
+        b = jnp.asarray(b_np)
+        for fam, kw in families:
+            for k in k_values:
+                sk = common.build_sketch(fam, d, k, seed, kw)
+
+                def end_to_end(A_, b_):
+                    return _ridge_solve(A_, b_, sk.apply, eff_lam)[1]
+
+                f = jax.jit(end_to_end)
+                t = common.time_fn(f, A, b)
+                res = float(f(A, b))
+                rows.append(common.BenchRow(
+                    task, ds, fam, d, n, sk.k, str(kw),
+                    1e6 * t, common.modeled_tpu_us(sk, n + 1),
+                    res, "rel_residual"))
+    return rows
+
+
+def ablation_rows(d: int, n: int, k: int, seed: int = 0,
+                  datasets=("gaussian", "llm_weights")) -> List[common.BenchRow]:
+    """κ/s ablation grid (App. F legend: blockperm(κ,s) settings)."""
+    rows = []
+    for ds in datasets:
+        A_np = common.make_dataset(ds, d, n, seed)
+        A = jnp.asarray(A_np)
+        for kappa in (1, 2, 4, 8):
+            for s in (1, 2, 4):
+                sk = common.build_sketch(
+                    "blockperm", d, k, seed, {"kappa": kappa, "s": s})
+                f = common.jit_apply(sk)
+                t = common.time_fn(f, A)
+                SA = np.asarray(f(A))
+                rows.append(common.BenchRow(
+                    "gram_ablation", ds, "blockperm", d, n, sk.k,
+                    f"kappa={kappa},s={s}",
+                    1e6 * t, common.modeled_tpu_us(sk, n),
+                    coherence.gram_rel_error(A_np, SA), "gram_rel_F"))
+    return rows

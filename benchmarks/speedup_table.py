@@ -1,0 +1,92 @@
+"""Table 1 analogue: geomean speedups of FlashSketch vs each baseline,
+aggregated over shapes × datasets × configs per task, on both time axes
+(measured CPU wall time; modeled TPU v5e time)."""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, Iterable, List, Tuple
+
+import numpy as np
+
+from benchmarks import common
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return float("nan")
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def speedup_table(rows: List[common.BenchRow],
+                  ours: str = "blockperm",
+                  baselines=common.PAPER_BASELINES) -> Dict[str, Dict[str, Dict[str, float]]]:
+    """table[task][baseline] = {measured: gx, modeled: gx} vs ours, matched
+    on (dataset, d, n, k-request bucket).  When several of our configs exist
+    at a cell (κ tuning), the fastest-modeled one is used — the paper tunes
+    κ on the Pareto frontier the same way."""
+    ours_rows = defaultdict(dict)
+    for r in rows:
+        if r.family == ours:
+            key = (r.task, r.dataset, r.d, r.n)
+            prev = ours_rows[key].get(r.k)
+            if prev is None or r.modeled_us < prev.modeled_us:
+                ours_rows[key][r.k] = r
+
+    def nearest(task_key, k):
+        cand = ours_rows.get(task_key)
+        if not cand:
+            return None
+        kk = min(cand, key=lambda x: abs(x - k))
+        return cand[kk]
+
+    table: Dict[str, Dict[str, Dict[str, List[float]]]] = defaultdict(
+        lambda: defaultdict(lambda: {"measured": [], "modeled": []}))
+    for r in rows:
+        if r.family == ours or (baselines and r.family not in baselines):
+            continue
+        mine = nearest((r.task, r.dataset, r.d, r.n), r.k)
+        if mine is None:
+            continue
+        if mine.measured_us > 0:
+            table[r.task][r.family]["measured"].append(
+                r.measured_us / mine.measured_us)
+        if mine.modeled_us > 0:
+            table[r.task][r.family]["modeled"].append(
+                r.modeled_us / mine.modeled_us)
+    out: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for task, fams in table.items():
+        out[task] = {}
+        for fam, axes in fams.items():
+            out[task][fam] = {ax: geomean(v) for ax, v in axes.items()}
+    return out
+
+
+def global_geomean_vs_next_best(table) -> Dict[str, float]:
+    """Paper headline: global geomean vs the NEXT-BEST baseline per cell."""
+    per_axis = {"measured": [], "modeled": []}
+    for task, fams in table.items():
+        for ax in per_axis:
+            best = min((v[ax] for v in fams.values() if np.isfinite(v[ax])),
+                       default=float("nan"))
+            if np.isfinite(best):
+                per_axis[ax].append(best)
+    return {ax: geomean(v) for ax, v in per_axis.items()}
+
+
+def format_markdown(table, headline) -> str:
+    fams = sorted({f for t in table.values() for f in t})
+    lines = ["| Task | " + " | ".join(fams) + " |",
+             "|---" * (len(fams) + 1) + "|"]
+    for task, row in sorted(table.items()):
+        cells = []
+        for f in fams:
+            v = row.get(f)
+            cells.append(f"{v['measured']:.2f}×/{v['modeled']:.2f}×" if v else "—")
+        lines.append(f"| {task} | " + " | ".join(cells) + " |")
+    lines.append("")
+    lines.append(f"Global geomean vs next-best baseline: "
+                 f"measured {headline['measured']:.2f}×, "
+                 f"modeled-TPU {headline['modeled']:.2f}× "
+                 f"(paper: 1.73×).")
+    return "\n".join(lines)

@@ -1,0 +1,1 @@
+"""repro: FlashSketch / BLOCKPERM-SJLT JAX framework."""

@@ -1,0 +1,1 @@
+"""GraSS data-attribution pipeline (paper §7.4 / App. E) on FlashSketch."""

@@ -1,0 +1,139 @@
+"""GraSS: per-example gradient → sparsify → sketch → feature cache →
+attribution (paper §7.4 / App. E).  The random-projection step — the paper's
+measured bottleneck — is FlashSketch; any variant from
+``repro.core.variants`` can be swapped in for the Pareto benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.attribution import mlp as mlp_lib
+from repro.core import hashing
+from repro.core.variants import SketchBase, make_sketch
+
+
+@dataclasses.dataclass(frozen=True)
+class GrassPipelineConfig:
+    sparse_dim: int = 4096         # gradient sparsification target (App. E)
+    sketch_dim: int = 1024         # k
+    sketch_family: str = "blockperm"
+    sketch_kwargs: tuple = ()      # extra (key, value) pairs
+    seed: int = 0
+    attribution: str = "dot"       # "dot" | "kernel" (TRAK preconditioned)
+    lam_rel: float = 1.0           # kernel ridge relative to mean eigenvalue
+
+
+def _flat_grad_fn(params):
+    """Per-example gradient of the margin output, flattened."""
+    def gfn(p, x, y):
+        g = jax.grad(lambda pp: mlp_lib.margin_output(pp, x[None], y[None])[0])(p)
+        return jnp.concatenate([a.reshape(-1) for a in jax.tree.leaves(g)])
+    return gfn
+
+
+def sparsify_mask(d_total: int, d_keep: int, seed: int) -> jnp.ndarray:
+    """GraSS gradient sparsification: a fixed random coordinate subset."""
+    u = jnp.arange(d_total, dtype=jnp.uint32)
+    scores = hashing.hash_words(np.uint32(seed), np.uint32(0x6A55), u)
+    idx = jnp.argsort(scores)[:d_keep]
+    return jnp.sort(idx)
+
+
+class GrassPipeline:
+    def __init__(self, cfg: GrassPipelineConfig, params):
+        self.cfg = cfg
+        self.params = params
+        d_total = sum(p.size for p in jax.tree.leaves(params))
+        self.d_total = d_total
+        d_keep = min(cfg.sparse_dim, d_total)
+        self.mask = sparsify_mask(d_total, d_keep, cfg.seed)
+        self.sketch: SketchBase = make_sketch(
+            cfg.sketch_family, d_keep, cfg.sketch_dim, seed=cfg.seed,
+            **dict(cfg.sketch_kwargs))
+        self._gfn = _flat_grad_fn(params)
+
+        def featurize(p, xs, ys):
+            grads = jax.vmap(lambda x, y: self._gfn(p, x, y))(xs, ys)  # (n, D)
+            sparse = grads[:, self.mask]                               # (n, d)
+            return self.sketch.apply(sparse.T).T                       # (n, k)
+
+        self._featurize = jax.jit(featurize)
+
+    # ---------------------------------------------------------------- cache
+    def build_cache(self, x_train, y_train, batch: int = 256) -> Tuple[jnp.ndarray, float]:
+        """Feature cache Φ ∈ (n_train, k); returns (cache, sketch_seconds)."""
+        feats = []
+        t = 0.0
+        for i in range(0, x_train.shape[0], batch):
+            xb = x_train[i:i + batch]
+            yb = y_train[i:i + batch]
+            t0 = time.perf_counter()
+            f = self._featurize(self.params, xb, yb)
+            f.block_until_ready()
+            t += time.perf_counter() - t0
+            feats.append(f)
+        return jnp.concatenate(feats, axis=0), t
+
+    # ----------------------------------------------------------- attribution
+    def attribute(self, cache: jnp.ndarray, x_test, y_test) -> np.ndarray:
+        """τ(z)_i: sketched-gradient similarity.
+
+        "dot":    τ = φ_z · φ_i           (GraSS default; robust at small n)
+        "kernel": τ = φ_zᵀ (ΦᵀΦ + λI)⁻¹ φ_i  (TRAK preconditioning; λ set
+                  relative to the mean kernel eigenvalue).
+        """
+        phi_z = self._featurize(self.params, x_test, y_test)     # (nt, k)
+        if self.cfg.attribution == "dot":
+            tau = phi_z @ cache.T                                # (nt, n_train)
+            return np.asarray(tau)
+        k = cache.shape[1]
+        K = cache.T @ cache
+        lam = self.cfg.lam_rel * jnp.trace(K) / k
+        sol = jnp.linalg.solve(K + lam * jnp.eye(k), phi_z.T)    # (k, nt)
+        tau = cache @ sol                                        # (n_train, nt)
+        return np.asarray(tau.T)                                 # (nt, n_train)
+
+
+def run_grass_lds(
+    pipe_cfg: GrassPipelineConfig,
+    mlp_cfg: mlp_lib.MLPConfig,
+    n_train: int = 512,
+    n_test: int = 32,
+    m_subsets: int = 20,
+    alpha: float = 0.5,
+    seed: int = 0,
+) -> Dict[str, float]:
+    """End-to-end GraSS + LDS evaluation (the paper Fig. 4 pipeline)."""
+    from repro.attribution import lds as lds_lib
+
+    x, y = mlp_lib.make_synthetic_mnist(n_train + n_test, mlp_cfg.d_in,
+                                        mlp_cfg.n_classes, seed=seed)
+    x_tr, y_tr = x[:n_train], y[:n_train]
+    x_te, y_te = x[n_train:], y[n_train:]
+
+    base = mlp_lib.train_mlp(mlp_cfg, x_tr, y_tr)
+    pipe = GrassPipeline(pipe_cfg, base)
+    cache, sketch_s = pipe.build_cache(x_tr, y_tr)
+    tau = pipe.attribute(cache, x_te, y_te)
+
+    masks = lds_lib.sample_subsets(n_train, m_subsets, alpha, seed)
+    true_out = np.empty((m_subsets, n_test))
+    for j in range(m_subsets):
+        pj = mlp_lib.train_mlp(mlp_cfg, x_tr, y_tr,
+                               key=jax.random.PRNGKey(1000 + j),
+                               mask=masks[j])
+        true_out[j] = np.asarray(mlp_lib.margin_output(pj, x_te, y_te))
+    score = lds_lib.lds_score(true_out, tau, masks)
+    return {
+        "lds": score,
+        "sketch_seconds": sketch_s,
+        "sketch_family": pipe_cfg.sketch_family,
+        "k": pipe_cfg.sketch_dim,
+        "per_sample_us": 1e6 * sketch_s / n_train,
+    }

@@ -1,0 +1,84 @@
+"""The GraSS evaluation model: a 3-layer ReLU MLP (paper App. E.2 uses
+109,386 params on MNIST; smoke tests shrink it) + a plain training loop used
+both for the base model and the m=50 LDS retrainings."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_in: int = 784
+    hidden: Tuple[int, ...] = (128, 64)
+    n_classes: int = 10
+    lr: float = 0.05
+    steps: int = 120
+    seed: int = 0
+
+
+def init_mlp(cfg: MLPConfig, key) -> Dict:
+    dims = (cfg.d_in, *cfg.hidden, cfg.n_classes)
+    params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k1 = jax.random.split(key)
+        params[f"w{i}"] = jax.random.normal(k1, (a, b), jnp.float32) / np.sqrt(a)
+        params[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+    return params
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    n = len(params) // 2
+    h = x
+    for i in range(n):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def nll_loss(params, x, y):
+    logits = mlp_apply(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def margin_output(params, x, y):
+    """TRAK's scalar model output f(z;θ): correct-class margin."""
+    logits = mlp_apply(params, x)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    other = logits - 1e9 * jax.nn.one_hot(y, logits.shape[-1])
+    return gold - jax.nn.logsumexp(other, axis=-1)
+
+
+def train_mlp(cfg: MLPConfig, x, y, key=None,
+              mask: Optional[np.ndarray] = None) -> Dict:
+    """Full-batch GD training (optionally on a row subset — LDS retrains)."""
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    if mask is not None:
+        x = x[mask]
+        y = y[mask]
+    params = init_mlp(cfg, key)
+    grad_fn = jax.jit(jax.grad(nll_loss))
+
+    @jax.jit
+    def step(p, _):
+        g = jax.grad(nll_loss)(p, x, y)
+        return jax.tree.map(lambda a, b: a - cfg.lr * b, p, g), None
+
+    params, _ = jax.lax.scan(step, params, None, length=cfg.steps)
+    return params
+
+
+def make_synthetic_mnist(n: int, d: int = 784, n_classes: int = 10,
+                         seed: int = 0, noise: float = 1.2):
+    """Class-centered Gaussian clusters: learnable, MNIST-shaped."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_classes, d)).astype(np.float32)
+    y = rng.integers(n_classes, size=n).astype(np.int32)
+    x = centers[y] + noise * rng.normal(size=(n, d)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)

@@ -1,0 +1,1 @@
+"""Architecture + shape configs (one module per assigned architecture)."""

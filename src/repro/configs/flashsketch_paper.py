@@ -1,0 +1,43 @@
+"""The paper's own evaluation configuration (FlashSketch defaults).
+
+Sketch shapes from §7 / App. F: d ∈ {16384, 65536, 131072, 262144},
+n ∈ {512, 1024}, k ∈ {64 ... 4096}, κ ∈ {1, 2, 4, 8}, s ∈ {1, 2, 4}.
+GraSS MLP: 3-layer ReLU MLP, 109,386 params, sketch 4k -> k ∈ {1024, 2048, 4096}.
+"""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperSketchConfig:
+    d_values: Tuple[int, ...] = (16_384, 65_536, 131_072, 262_144)
+    n_for_small_d: int = 1024          # d <= 65536
+    n_for_large_d: int = 512
+    k_values: Tuple[int, ...] = (64, 256, 512, 1024, 2048, 4096)
+    kappa_values: Tuple[int, ...] = (1, 2, 4, 8)
+    s_values: Tuple[int, ...] = (1, 2, 4)
+    datasets: Tuple[str, ...] = (
+        "gaussian", "lowrank_noise", "sparse_suitesparse_like", "llm_weights_like"
+    )
+
+    def n_for(self, d: int) -> int:
+        return self.n_for_small_d if d <= 65_536 else self.n_for_large_d
+
+
+CONFIG = PaperSketchConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class GrassConfig:
+    """GraSS end-to-end pipeline config (paper App. E)."""
+    mlp_hidden: Tuple[int, ...] = (256, 256)
+    mlp_in: int = 784                   # MNIST-like
+    mlp_out: int = 10
+    grad_dim_sketch_from: int = 4096    # "sketch down from dimension 4k"
+    k_values: Tuple[int, ...] = (1024, 2048, 4096)
+    n_subsets: int = 50                 # m=50 LDS retraining subsets
+    subset_frac: float = 0.5            # alpha=0.5
+    sparsify_keep: float = 0.25         # gradient sparsification fraction
+
+
+GRASS = GrassConfig()

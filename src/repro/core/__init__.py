@@ -1,0 +1,9 @@
+"""Core BLOCKPERM-SJLT library (the paper's primary contribution).
+
+Public API:
+
+    from repro.core import make_plan, BlockPermPlan
+    from repro.core.variants import make_sketch
+    from repro.kernels.ops import sketch_apply, sketch_apply_t
+"""
+from repro.core.blockperm import BlockPermPlan, make_plan  # noqa: F401

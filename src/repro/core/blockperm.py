@@ -1,0 +1,184 @@
+"""BLOCKPERM-SJLT parameterization (paper §4) and shared randomness helpers.
+
+A plan freezes every static quantity of the sketch: logical dims (d, k),
+padded dims, block grid (M, B_r, B_c), wiring params (a, b), intra-block
+sparsity s, degree κ, and the seed.  The plan is hashable/pytree-static so it
+can parameterize jitted functions and Pallas kernels.
+
+Intra-block construction (row-partitioned SJLT, Kane–Nelson "block
+construction", used by the paper's theory in App. A.3): the B_r rows of a
+block are divided into s chunks of size B_r/s; nonzero i ∈ [s] of column u
+lands in chunk i at row  ``i·(B_r/s) + hash(seed,g,h,u,i) mod (B_r/s)`` with
+sign from an independent hash bit.  Exactly s nonzeros per column, one per
+chunk ⇒ exactly κs nonzeros per column of S, magnitude 1/√(κs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, wiring
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPermPlan:
+    """Static description of one BLOCKPERM-SJLT draw.
+
+    Per the paper (§4, "we deal with general cases in practice by padding"),
+    a requested sketch dimension ``k_req`` is rounded *up* to ``k = M·B_r``:
+    the effective sketch has exactly κs nonzeros per column and is unbiased
+    (truncating rows instead would break both properties).  The input dim d
+    is zero-padded to ``d_pad = M·B_c`` (exact — padded coordinates are 0).
+    """
+
+    d: int                 # logical input dim
+    k: int                 # effective sketch dim (= k_pad = M * Br)
+    k_req: int             # sketch dim the caller asked for (k >= k_req)
+    d_pad: int             # padded input dim  = M * Bc
+    k_pad: int             # padded sketch dim = M * Br (== k)
+    M: int                 # number of blocks per side (power of two)
+    Br: int                # output block rows
+    Bc: int                # input block cols
+    kappa: int             # block degree (number of permutations)
+    s: int                 # intra-block nonzeros per column (divides Br)
+    seed: int
+    a: int                 # wiring LCG multiplier
+    b: int                 # wiring LCG offset
+
+    @property
+    def nnz_per_col(self) -> int:
+        return self.kappa * self.s
+
+    @property
+    def scale(self) -> float:
+        return 1.0 / math.sqrt(self.kappa * self.s)
+
+    @property
+    def chunk(self) -> int:
+        """Row-partition chunk height B_r / s."""
+        return self.Br // self.s
+
+    def neighbors(self, g: int) -> Tuple[int, ...]:
+        return tuple(
+            wiring.neighbor_fused(g, ell + 1, self.a, self.b, self.M)
+            for ell in range(self.kappa)
+        )
+
+    def describe(self) -> str:
+        return (
+            f"BlockPermPlan(d={self.d}->pad{self.d_pad}, k={self.k}->pad{self.k_pad}, "
+            f"M={self.M}, Br={self.Br}, Bc={self.Bc}, kappa={self.kappa}, s={self.s}, "
+            f"nnz/col={self.nnz_per_col}, seed={self.seed})"
+        )
+
+
+def make_plan(
+    d: int,
+    k: int,
+    *,
+    kappa: int = 4,
+    s: int = 2,
+    seed: int = 0,
+    block_rows: Optional[int] = None,
+    max_block_rows: int = 256,
+) -> BlockPermPlan:
+    """Choose a hardware-aligned block grid for (d, k) and freeze the plan.
+
+    Strategy: pick M as a power of two so that B_r = k/M is ≤ max_block_rows
+    (keeps the one-hot MXU contraction below the v5e ridge point, see
+    DESIGN.md §2) while M ≥ κ (edge-disjointness needs κ ≤ M) and B_r ≥ s.
+    d and k are padded up to M·B_c and M·B_r.
+    """
+    if d <= 0 or k <= 0:
+        raise ValueError("d and k must be positive")
+    if kappa < 1 or s < 1:
+        raise ValueError("kappa and s must be >= 1")
+
+    if block_rows is not None:
+        Br = _next_pow2(block_rows)
+    else:
+        Br = min(_next_pow2(max(s, min(max_block_rows, k))), max_block_rows)
+        Br = max(Br, _next_pow2(s))
+    M = _next_pow2(max(1, math.ceil(k / Br)))
+    # Ensure κ ≤ M: grow M (shrinking Br) until the wiring is realizable.
+    while M < kappa:
+        M *= 2
+    Br = max(_next_pow2(math.ceil(k / M)), _next_pow2(s))
+    if Br % s != 0:
+        # s must divide Br for the row partition; round s down to a divisor.
+        raise ValueError(f"s={s} must divide Br={Br} (both powers of two ok)")
+    Bc = max(1, math.ceil(d / M))
+    # Lane-align Bc when the block is big enough to care (TPU lane = 128).
+    if Bc > 128:
+        Bc = ((Bc + 127) // 128) * 128
+    k_pad = M * Br
+    d_pad = M * Bc
+    a, b = wiring.derive_affine_params(seed, M)
+    return BlockPermPlan(
+        d=d, k=k_pad, k_req=k, d_pad=d_pad, k_pad=k_pad, M=M, Br=Br, Bc=Bc,
+        kappa=kappa, s=s, seed=seed, a=a, b=b,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared randomness: destination rows and signs for the intra-block SJLT.
+# These functions are used verbatim by ref.py and by the Pallas kernel body;
+# tests assert bit-identical streams.
+# ---------------------------------------------------------------------------
+
+def block_rows_signs(plan: BlockPermPlan, g, h, u, i):
+    """Destination row in [Br] and sign for nonzero i of column u of block (g,h).
+
+    All of (g, h, u, i) may be arrays (broadcastable); returns (rows int32,
+    signs float32).
+    """
+    hsh = hashing.hash_words(
+        np.uint32(plan.seed),
+        jnp.asarray(g, jnp.uint32),
+        jnp.asarray(h, jnp.uint32),
+        jnp.asarray(u, jnp.uint32),
+        jnp.asarray(i, jnp.uint32),
+    )
+    chunk = plan.chunk
+    rows = jnp.asarray(i, jnp.int32) * chunk + hashing.hash_mod(hsh, chunk)
+    signs = hashing.hash_to_unit_sign(hsh)
+    return rows, signs
+
+
+def dense_block(plan: BlockPermPlan, g, h) -> jnp.ndarray:
+    """Materialize Φ_{g,h} ∈ R^{Br×Bc} (entries ±1, unscaled) via one-hot sum.
+
+    Used by the reference oracle and (tile-wise) inside the Pallas kernel.
+    """
+    u = jnp.arange(plan.Bc, dtype=jnp.int32)            # (Bc,)
+    i = jnp.arange(plan.s, dtype=jnp.int32)             # (s,)
+    rows, signs = block_rows_signs(
+        plan, g, h, u[None, :], i[:, None]
+    )                                                    # (s, Bc) each
+    row_iota = jnp.arange(plan.Br, dtype=jnp.int32)      # (Br,)
+    onehot = (row_iota[None, :, None] == rows[:, None, :]).astype(jnp.float32)
+    phi = jnp.sum(onehot * signs[:, None, :], axis=0)    # (Br, Bc)
+    return phi
+
+
+def materialize_sketch_matrix(plan: BlockPermPlan) -> jnp.ndarray:
+    """Full S ∈ R^{k_pad × d_pad} (dense), for tests and tiny benchmarks only."""
+    pi = wiring.wiring_table(plan.seed, plan.M, plan.kappa)  # (κ, M)
+    S = jnp.zeros((plan.k_pad, plan.d_pad), dtype=jnp.float32)
+    for g in range(plan.M):
+        for ell in range(plan.kappa):
+            h = int(pi[ell, g])
+            phi = dense_block(plan, g, h)
+            S = S.at[
+                g * plan.Br:(g + 1) * plan.Br,
+                h * plan.Bc:(h + 1) * plan.Bc,
+            ].add(phi)
+    return S * plan.scale

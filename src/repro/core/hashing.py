@@ -1,0 +1,113 @@
+"""Counter-based 32-bit mixing hashes, shared by ref oracle and Pallas kernel.
+
+The paper (§5.2, App. D) generates all sketch randomness on the fly from a
+fast 32-bit mixing hash of ``(seed, g, h, u, i)``.  We implement a murmur3 /
+splitmix-style finalizer over uint32 lanes.  The *same* jnp function is used
+by the pure-jnp reference (vectorized over index grids) and inside the Pallas
+kernel body (vectorized over ``broadcasted_iota`` tiles), so the two produce
+bit-identical streams — this is asserted in tests.
+
+All ops are uint32 with wrap-around semantics (JAX guarantees modular
+arithmetic for unsigned ints).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Golden-ratio derived odd constants (splitmix32 / murmur3 finalizer).
+# NOTE: numpy scalars, not jnp arrays — Pallas kernel bodies must not capture
+# array constants, and numpy scalars trace as literals.
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_GAMMA = np.uint32(0x9E3779B9)
+
+
+def _u32(x):
+    """Cast to uint32, preferring numpy scalars for python/numpy inputs."""
+    if isinstance(x, (int, np.integer)):
+        return np.uint32(x)
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 fmix32 finalizer: bijective mixing of a uint32 lane."""
+    x = _u32(x)
+    if isinstance(x, np.uint32):  # pure-python path (static tables)
+        x = np.uint32(x) ^ np.uint32(int(x) >> 16)
+        x = np.uint32((int(x) * int(_C1)) & 0xFFFFFFFF)
+        x = np.uint32(x) ^ np.uint32(int(x) >> 13)
+        x = np.uint32((int(x) * int(_C2)) & 0xFFFFFFFF)
+        x = np.uint32(x) ^ np.uint32(int(x) >> 16)
+        return x
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def combine(h: jnp.ndarray, v) -> jnp.ndarray:
+    """Fold one more word into a running hash (boost::hash_combine flavor)."""
+    h = _u32(h)
+    v = _u32(v)
+    MASK = 0xFFFFFFFF
+    if isinstance(h, np.uint32) and isinstance(v, np.uint32):
+        # Pure-python path, exact same arithmetic mod 2^32.
+        vm = int(mix32(np.uint32((int(v) + int(_GAMMA)) & MASK)))
+        x = int(h) ^ ((vm + int(_GAMMA) + ((int(h) << 6) & MASK) + (int(h) >> 2)) & MASK)
+        return mix32(np.uint32(x & MASK))
+    if isinstance(v, np.uint32):
+        # Pre-fold v's mixing (and the +GAMMA) in python ints so no
+        # numpy-scalar adds can overflow-warn; identical mod 2^32.
+        vm = int(mix32(np.uint32((int(v) + int(_GAMMA)) & MASK)))
+        v_plus = np.uint32((vm + int(_GAMMA)) & MASK)
+    else:
+        v_plus = mix32(v + _GAMMA) + _GAMMA
+    return mix32(h ^ (v_plus + (h << 6) + (h >> 2)))
+
+
+def hash_words(*words) -> jnp.ndarray:
+    """Hash a sequence of uint32 words (scalars or broadcastable arrays)."""
+    h = _u32(words[0])
+    if isinstance(h, np.uint32):
+        h = mix32(np.uint32((int(h) + int(_GAMMA)) & 0xFFFFFFFF))
+    else:
+        h = mix32(h + _GAMMA)
+    for w in words[1:]:
+        h = combine(h, w)
+    return h
+
+
+def hash_to_unit_sign(h: jnp.ndarray, bit: int = 31):
+    """Extract a Rademacher ±1 (float32) from bit ``bit`` of a hash."""
+    b = (h >> np.uint32(bit)) & np.uint32(1)
+    return jnp.where(b == 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def hash_mod(h: jnp.ndarray, modulus) -> jnp.ndarray:
+    """Reduce a hash to ``[0, modulus)`` as int32.
+
+    ``modulus`` is a python int (static).  For power-of-two moduli this is a
+    mask; otherwise a true mod (slightly biased for huge moduli; fine for
+    sketching randomness — the bias is ≤ modulus/2^32).
+    """
+    m = int(modulus)
+    if m & (m - 1) == 0:
+        return (h & np.uint32(m - 1)).astype(jnp.int32)
+    return (h % np.uint32(m)).astype(jnp.int32)
+
+
+def hash_gaussian_pair(h: jnp.ndarray):
+    """Two approximately-N(0,1) floats from one hash via Box-Muller.
+
+    Used only by the on-the-fly dense-Gaussian baseline; sketch quality does
+    not depend on tail perfection.
+    """
+    u1 = (mix32(h) >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24))
+    u2 = (mix32(h ^ _C1) >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24))
+    u1 = jnp.maximum(u1, 1e-7)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    theta = (2.0 * jnp.pi) * u2
+    return r * jnp.cos(theta), r * jnp.sin(theta)

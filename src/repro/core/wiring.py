@@ -1,0 +1,122 @@
+"""Block-level wiring: union of κ edge-disjoint permutations of [M].
+
+Paper App. D: rather than materializing κ permutation tables, neighbors are
+generated on the fly by iterating a *full-cycle* affine map
+
+    f(x) = (a·x + b) mod M,        π_ℓ(g) = f^ℓ(g),  ℓ = 1..κ.
+
+Full period (Hull & Dobell 1962) requires gcd(b, M)=1, (a−1) divisible by
+every prime factor of M, and 4 | (a−1) if 4 | M.  We restrict M to powers of
+two (the plan pads d, k so this always holds), where the conditions reduce to
+``a ≡ 1 (mod 4)`` and ``b`` odd — both trivially derivable from a hash.
+
+Because f is a single M-cycle, f^j has no fixed point for 1 ≤ j < M, hence
+π_1..π_κ are pairwise derangements (edge-disjoint) for any κ ≤ M, and the
+block bipartite graph is exactly κ-regular on both sides.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+
+def derive_affine_params(seed: int, M: int) -> Tuple[int, int]:
+    """Derive full-cycle LCG params (a, b) for modulus M (power of two).
+
+    Returned as *python ints* so they can be baked into kernels and
+    BlockSpec index_maps as static constants.
+    """
+    if M & (M - 1) != 0:
+        raise ValueError(f"wiring modulus M={M} must be a power of two")
+    h1 = int(hashing.hash_words(np.uint32(seed), np.uint32(0xA11CE)))
+    h2 = int(hashing.hash_words(np.uint32(seed), np.uint32(0xB0B)))
+    if M <= 2:
+        # Degenerate moduli: identity-ish cycle; a=1 keeps full period.
+        a = 1
+        b = 1 % max(M, 1)
+        if M == 2:
+            b = 1
+        return a, b
+    a = (4 * (h1 % (M // 4)) + 1) % M if M >= 4 else 1
+    if a == 1 and M >= 8:
+        a = 5  # avoid the identity multiplier when we can mix more
+    b = (2 * (h2 % (M // 2)) + 1) % M  # odd => coprime with 2^m
+    return int(a), int(b)
+
+
+def affine_step(x, a: int, b: int, M: int):
+    """One application of f(x) = (a x + b) mod M. Works on ints or arrays."""
+    return (a * x + b) % M
+
+
+def neighbor(g, ell: int, a: int, b: int, M: int):
+    """π_ℓ(g) = f^ℓ(g) via iterated affine map (ℓ static, small)."""
+    x = g
+    for _ in range(ell):
+        x = affine_step(x, a, b, M)
+    return x
+
+
+def neighbor_fused(g, ell: int, a: int, b: int, M: int):
+    """Closed form f^ℓ(g) = a^ℓ g + b(a^{ℓ-1}+…+1) mod M.
+
+    Matches :func:`neighbor`; preferred inside index_maps (constant folding).
+    """
+    a_l = pow(a, ell, M)
+    if a == 1:
+        geo = ell % M
+    else:
+        # sum_{t<ell} a^t mod M. M is 2^m and a is odd => (a-1) may share
+        # factors with M, so compute the geometric sum iteratively mod M.
+        geo = 0
+        term = 1
+        for _ in range(ell):
+            geo = (geo + term) % M
+            term = (term * a) % M
+    return (a_l * g + (b * geo) % M) % M
+
+
+def wiring_table(seed: int, M: int, kappa: int) -> np.ndarray:
+    """Materialize π as a (κ, M) int32 table (tests / reference only)."""
+    a, b = derive_affine_params(seed, M)
+    g = np.arange(M, dtype=np.int64)
+    out = np.empty((kappa, M), dtype=np.int32)
+    x = g.copy()
+    for ell in range(kappa):
+        x = (a * x + b) % M
+        out[ell] = x
+    return out
+
+
+def check_edge_disjoint(pi: np.ndarray) -> bool:
+    """Every output block's κ neighbors are distinct (pairwise derangements)."""
+    kappa, M = pi.shape
+    for g in range(M):
+        if len(set(pi[:, g].tolist())) != kappa:
+            return False
+    return True
+
+
+def check_biregular(pi: np.ndarray) -> bool:
+    """Each input block appears in exactly κ neighborhoods."""
+    kappa, M = pi.shape
+    counts = np.zeros(M, dtype=np.int64)
+    for ell in range(kappa):
+        np.add.at(counts, pi[ell], 1)
+    return bool(np.all(counts == kappa))
+
+
+def wiring_jnp(seed: int, M: int, kappa: int) -> jnp.ndarray:
+    """(κ, M) wiring table as a traced jnp computation (for ref apply)."""
+    a, b = derive_affine_params(seed, M)
+    g = jnp.arange(M, dtype=jnp.int32)
+    rows = []
+    x = g
+    for _ in range(kappa):
+        x = (a * x + b) % M
+        rows.append(x)
+    return jnp.stack(rows, axis=0)

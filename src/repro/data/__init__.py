@@ -1,0 +1,1 @@
+"""Data pipeline: deterministic, shard-aware synthetic token streams."""

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (the sketch apply).
+
+  flashsketch.py — FLASHSKETCH fwd/transpose + FLASHBLOCKROW pallas_call
+  ops.py         — jit'd public wrappers with padding + custom_vjp
+  ref.py         — pure-jnp oracles (ground truth for tests)
+"""

@@ -1,0 +1,291 @@
+"""FLASHSKETCH Pallas/TPU kernel (paper §5, adapted per DESIGN.md §2).
+
+Grid ``(n/T_n, M, κ)`` with the κ axis as an arbitrary-order reduction:
+program ``(j, g, ℓ)`` owns output tile ``Y[g·B_r:(g+1)B_r, j·T_n:(j+1)T_n]``
+(resident in VMEM across the κ revisits — the TPU analogue of the paper's
+"one thread-block owns one output tile, single global write") and streams
+input block ``h = π_{ℓ+1}(g)`` through VMEM.  The block wiring is evaluated
+*inside the BlockSpec index_map* from precomputed affine constants — the
+paper's App. D on-the-fly generation, moved to the scalar core.
+
+The intra-block scatter-add is re-expressed as an on-the-fly one-hot
+contraction on the MXU: Φ_{g,h} is built in VMEM from ``broadcasted_iota`` +
+counter-based hashes (bit-identical to ``ref.py``) and contracted with the
+input tile.  No atomics exist or are needed.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hashing
+from repro.core.blockperm import BlockPermPlan
+from repro.kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# Static wiring tables:  π_ℓ(g) = A_ℓ·g + B_ℓ (mod M)  for ℓ = 1..κ,
+# plus the inverse maps for the transpose kernel.
+# ---------------------------------------------------------------------------
+
+def _wiring_tables(plan: BlockPermPlan) -> Tuple[np.ndarray, np.ndarray]:
+    A_tab = np.empty(plan.kappa, np.int32)
+    B_tab = np.empty(plan.kappa, np.int32)
+    a_l, b_l = 1, 0
+    for ell in range(plan.kappa):
+        # f^{ell+1} = f ∘ f^{ell}:  a_{l+1} = a·a_l, b_{l+1} = a·b_l + b.
+        a_l = (plan.a * a_l) % plan.M
+        b_l = (plan.a * b_l + plan.b) % plan.M
+        A_tab[ell], B_tab[ell] = a_l, b_l
+    return A_tab, B_tab
+
+
+def _inverse_wiring_tables(plan: BlockPermPlan) -> Tuple[np.ndarray, np.ndarray]:
+    A_tab, B_tab = _wiring_tables(plan)
+    Ai = np.empty_like(A_tab)
+    Bi = np.empty_like(B_tab)
+    for ell in range(plan.kappa):
+        a_inv = pow(int(A_tab[ell]), -1, plan.M) if plan.M > 1 else 0
+        Ai[ell] = a_inv % plan.M
+        Bi[ell] = (-a_inv * int(B_tab[ell])) % plan.M
+    return Ai, Bi
+
+
+# ---------------------------------------------------------------------------
+# In-kernel Φ construction (must match ref._phi_all_blocks bit-for-bit).
+# ---------------------------------------------------------------------------
+
+def _phi_tile(plan: BlockPermPlan, g, h) -> jnp.ndarray:
+    """Φ_{g,h} ∈ (Br, Bc), entries ±1/0, built from hashes. g,h traced scalars."""
+    u = jax.lax.broadcasted_iota(jnp.int32, (1, plan.Bc), 1)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (plan.Br, plan.Bc), 0)
+    chunk = plan.chunk
+    phi = jnp.zeros((plan.Br, plan.Bc), jnp.float32)
+    for i in range(plan.s):
+        hsh = hashing.hash_words(
+            np.uint32(plan.seed),
+            g.astype(jnp.uint32),
+            h.astype(jnp.uint32),
+            u.astype(jnp.uint32),
+            np.uint32(i),
+        )                                              # (1, Bc)
+        rows = i * chunk + hashing.hash_mod(hsh, chunk)
+        signs = hashing.hash_to_unit_sign(hsh)
+        phi = phi + jnp.where(r_iota == rows, signs, 0.0)
+    return phi
+
+
+def _phi_rows_tile(plan: BlockPermPlan, g, h) -> jnp.ndarray:
+    """FLASHBLOCKROW pattern: s ±1 entries per *row*. Matches ref._phi_rows_all_blocks."""
+    r = jax.lax.broadcasted_iota(jnp.int32, (plan.Br, 1), 0)
+    c_iota = jax.lax.broadcasted_iota(jnp.int32, (plan.Br, plan.Bc), 1)
+    phi = jnp.zeros((plan.Br, plan.Bc), jnp.float32)
+    for t in range(plan.s):
+        hsh = hashing.hash_words(
+            np.uint32(plan.seed),
+            np.uint32(0x5EED),
+            g.astype(jnp.uint32),
+            h.astype(jnp.uint32),
+            r.astype(jnp.uint32),
+            np.uint32(t),
+        )                                              # (Br, 1)
+        cols = hashing.hash_mod(hsh, plan.Bc)
+        signs = hashing.hash_to_unit_sign(hsh)
+        phi = phi + jnp.where(c_iota == cols, signs, 0.0)
+    return phi
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies.  The (κ, M) wiring table arrives as a *scalar-prefetch*
+# operand (pltpu.PrefetchScalarGridSpec): the TPU scalar core reads it ahead
+# of the grid loop so BlockSpec index_maps can do data-dependent block
+# selection — the Pallas-idiomatic realization of the paper's on-the-fly
+# wiring (App. D).  The table itself is κ·M int32s (a few KB), generated from
+# the affine full-cycle map.
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale):
+    g = pl.program_id(1)
+    ell = pl.program_id(2)
+    h = tab_ref[ell, g]
+    phi = _phi_tile(plan, g, h)
+    contrib = jnp.dot(
+        phi, a_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+    @pl.when(ell == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(ell > 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+def _transpose_kernel(tab_ref, y_ref, o_ref, *, plan: BlockPermPlan, scale):
+    hb = pl.program_id(1)               # input block index (output of Sᵀ)
+    ell = pl.program_id(2)
+    g = tab_ref[ell, hb]                # g = f^{-ℓ}(hb)
+    phi = _phi_tile(plan, g, hb)        # (Br, Bc)
+    contrib = jnp.dot(
+        phi.T, y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+    @pl.when(ell == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(ell > 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+def _blockrow_kernel(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale):
+    g = pl.program_id(1)
+    ell = pl.program_id(2)
+    h = tab_ref[ell, g]
+    phi = _phi_rows_tile(plan, g, h)
+    contrib = jnp.dot(
+        phi, a_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+    @pl.when(ell == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(ell > 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (raw; user-facing API with padding/custom_vjp in ops.py)
+# ---------------------------------------------------------------------------
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _compiler_params(interpret: bool):
+    if interpret:
+        return None
+    try:
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    except AttributeError:  # older jax spelling
+        return pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+
+
+def _fwd_neighbor_table(plan: BlockPermPlan) -> np.ndarray:
+    """(κ, M) table: h = π_{ℓ+1}(g)."""
+    A_tab, B_tab = _wiring_tables(plan)
+    g = np.arange(plan.M, dtype=np.int64)
+    return np.stack(
+        [(A_tab[l] * g + B_tab[l]) % plan.M for l in range(plan.kappa)]
+    ).astype(np.int32)
+
+
+def _inv_neighbor_table(plan: BlockPermPlan) -> np.ndarray:
+    """(κ, M) table: g = π_{ℓ+1}^{-1}(h)."""
+    Ai, Bi = _inverse_wiring_tables(plan)
+    h = np.arange(plan.M, dtype=np.int64)
+    return np.stack(
+        [(int(Ai[l]) * h + int(Bi[l])) % plan.M for l in range(plan.kappa)]
+    ).astype(np.int32)
+
+
+def _run(plan, kernel, tab, operand, in_block, out_block, out_rows, n, tn, interpret):
+    grid = (n // tn, plan.M, plan.kappa)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(in_block, lambda j, g, l, tab_ref: (tab_ref[l, g], j)),
+        ],
+        out_specs=pl.BlockSpec(out_block, lambda j, g, l, tab_ref: (g, j)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((out_rows, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=_compiler_params(interpret),
+    )(jnp.asarray(tab), operand)
+
+
+def flashsketch_pallas(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    *,
+    tn: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Y = S A via the Pallas kernel. A must already be (d_pad, n) with n % tn == 0."""
+    if interpret is None:
+        interpret = _should_interpret()
+    d_pad, n = A.shape
+    assert d_pad == plan.d_pad, (d_pad, plan.d_pad)
+    assert n % tn == 0, (n, tn)
+    kernel = functools.partial(_fwd_kernel, plan=plan, scale=plan.scale)
+    return _run(
+        plan, kernel, _fwd_neighbor_table(plan), A,
+        in_block=(plan.Bc, tn), out_block=(plan.Br, tn),
+        out_rows=plan.k_pad, n=n, tn=tn, interpret=interpret,
+    )
+
+
+def flashsketch_transpose_pallas(
+    plan: BlockPermPlan,
+    Y: jnp.ndarray,
+    *,
+    tn: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """X = Sᵀ Y via the Pallas kernel. Y must be (k_pad, n) with n % tn == 0."""
+    if interpret is None:
+        interpret = _should_interpret()
+    k_pad, n = Y.shape
+    assert k_pad == plan.k_pad, (k_pad, plan.k_pad)
+    assert n % tn == 0, (n, tn)
+    kernel = functools.partial(_transpose_kernel, plan=plan, scale=plan.scale)
+    return _run(
+        plan, kernel, _inv_neighbor_table(plan), Y,
+        in_block=(plan.Br, tn), out_block=(plan.Bc, tn),
+        out_rows=plan.d_pad, n=n, tn=tn, interpret=interpret,
+    )
+
+
+def blockrow_pallas(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    *,
+    tn: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """FLASHBLOCKROW forward via Pallas. A must be (d_pad, n), n % tn == 0."""
+    if interpret is None:
+        interpret = _should_interpret()
+    d_pad, n = A.shape
+    assert d_pad == plan.d_pad
+    assert n % tn == 0
+    h_np = np.asarray(kref.blockrow_wiring(plan))           # (κ, M) static
+    scale = plan.scale * math.sqrt(plan.d_pad / plan.k_pad)
+    kernel = functools.partial(_blockrow_kernel, plan=plan, scale=scale)
+    return _run(
+        plan, kernel, h_np, A,
+        in_block=(plan.Bc, tn), out_block=(plan.Br, tn),
+        out_rows=plan.k_pad, n=n, tn=tn, interpret=interpret,
+    )

@@ -1,0 +1,107 @@
+"""Public jit'd wrappers for the FlashSketch kernels.
+
+``sketch_apply(plan, A, impl=...)`` handles padding, impl dispatch
+(Pallas-on-TPU / interpret-on-CPU / pure-XLA einsum), and differentiation:
+the VJP of ``Y = S A`` w.r.t. ``A`` is ``Sᵀ dY`` — the transpose kernel —
+so sketching composes with ``jax.grad`` (needed when the sketch sits inside
+a training graph, e.g. sketched gradient compression with error feedback).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockperm import BlockPermPlan
+from repro.kernels import flashsketch as fsk
+from repro.kernels import ref as kref
+
+Impl = Literal["auto", "pallas", "xla"]
+
+
+def _resolve_impl(impl: Impl) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pad_cols(A: jnp.ndarray, tn: int) -> tuple[jnp.ndarray, int]:
+    n = A.shape[1]
+    n_pad = ((n + tn - 1) // tn) * tn
+    if n_pad != n:
+        A = jnp.pad(A, ((0, 0), (0, n_pad - n)))
+    return A, n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3))
+def sketch_apply(plan: BlockPermPlan, A: jnp.ndarray, impl: Impl = "auto", tn: int = 128):
+    """Y = S A.  A: (d, n) -> (k, n).  Differentiable in A."""
+    return _sketch_apply_impl(plan, A, impl, tn)
+
+
+def _sketch_apply_impl(plan, A, impl, tn):
+    impl = _resolve_impl(impl)
+    if impl == "xla":
+        return kref.flashsketch_ref(plan, A)
+    Ap = kref.pad_input(plan, A)
+    Ap, n = _pad_cols(Ap, tn)
+    Y = fsk.flashsketch_pallas(plan, Ap, tn=tn)
+    return Y[: plan.k, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3))
+def sketch_apply_t(plan: BlockPermPlan, Y: jnp.ndarray, impl: Impl = "auto", tn: int = 128):
+    """X = Sᵀ Y.  Y: (k, n) -> (d, n).  Differentiable in Y."""
+    return _sketch_apply_t_impl(plan, Y, impl, tn)
+
+
+def _sketch_apply_t_impl(plan, Y, impl, tn):
+    impl = _resolve_impl(impl)
+    if impl == "xla":
+        return kref.flashsketch_transpose_ref(plan, Y)
+    Yp = Y
+    if Y.shape[0] != plan.k_pad:
+        Yp = jnp.pad(Y, ((0, plan.k_pad - Y.shape[0]), (0, 0)))
+    Yp, n = _pad_cols(Yp, tn)
+    X = fsk.flashsketch_transpose_pallas(plan, Yp, tn=tn)
+    return X[: plan.d, :n]
+
+
+def _apply_fwd(plan, A, impl, tn):
+    return _sketch_apply_impl(plan, A, impl, tn), None
+
+
+def _apply_bwd(plan, impl, tn, _res, dY):
+    return (_sketch_apply_t_impl(plan, dY, impl, tn),)
+
+
+def _apply_t_fwd(plan, Y, impl, tn):
+    return _sketch_apply_t_impl(plan, Y, impl, tn), None
+
+
+def _apply_t_bwd(plan, impl, tn, _res, dX):
+    return (_sketch_apply_impl(plan, dX, impl, tn),)
+
+
+sketch_apply.defvjp(_apply_fwd, _apply_bwd)
+sketch_apply_t.defvjp(_apply_t_fwd, _apply_t_bwd)
+
+
+def blockrow_apply(plan: BlockPermPlan, A: jnp.ndarray, impl: Impl = "auto", tn: int = 128):
+    """FLASHBLOCKROW forward (no VJP — appendix-C variant is eval-only)."""
+    impl = _resolve_impl(impl)
+    if impl == "xla":
+        return kref.blockrow_ref(plan, A)
+    Ap = kref.pad_input(plan, A)
+    Ap, n = _pad_cols(Ap, tn)
+    Y = fsk.blockrow_pallas(plan, Ap, tn=tn)
+    return Y[: plan.k, :n]
+
+
+def sketch_vectors(plan: BlockPermPlan, x: jnp.ndarray, impl: Impl = "auto"):
+    """Sketch a single vector or batch-of-vectors laid out (..., d) -> (..., k)."""
+    flat = x.reshape(-1, x.shape[-1])                 # (n, d)
+    Y = sketch_apply(plan, flat.T, impl)              # (k, n)
+    return Y.T.reshape(*x.shape[:-1], plan.k)

@@ -1,0 +1,148 @@
+"""Pure-jnp reference oracles for the FlashSketch / FlashBlockRow kernels.
+
+These are the ground-truth semantics: the Pallas kernels in
+``flashsketch.py`` / ``blockrow.py`` must match them bit-for-bit in the hash
+stream and to float tolerance in the output (asserted in tests).
+
+Shapes follow the paper: ``A ∈ R^{d×n}``, ``S ∈ R^{k×d}``, ``Y = S A ∈ R^{k×n}``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, wiring
+from repro.core.blockperm import BlockPermPlan
+
+
+def pad_input(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
+    """Zero-pad A from (d, n) to (d_pad, n)."""
+    d, _ = A.shape
+    if d == plan.d_pad:
+        return A
+    return jnp.pad(A, ((0, plan.d_pad - d), (0, 0)))
+
+
+def _phi_all_blocks(plan: BlockPermPlan, h_of_g: jnp.ndarray) -> jnp.ndarray:
+    """Φ for all output blocks at once: (M, Br, Bc), entries ±1/0 (unscaled).
+
+    ``h_of_g``: (M,) int32, the input block feeding each output block for one
+    permutation level ℓ.
+    """
+    g = jnp.arange(plan.M, dtype=jnp.int32)[:, None]      # (M, 1)
+    u = jnp.arange(plan.Bc, dtype=jnp.int32)[None, :]     # (1, Bc)
+    r_iota = jnp.arange(plan.Br, dtype=jnp.int32)         # (Br,)
+    phi = jnp.zeros((plan.M, plan.Br, plan.Bc), jnp.float32)
+    chunk = plan.chunk
+    for i in range(plan.s):
+        hsh = hashing.hash_words(
+            np.uint32(plan.seed),
+            g.astype(jnp.uint32),
+            h_of_g[:, None].astype(jnp.uint32),
+            u.astype(jnp.uint32),
+            np.uint32(i),
+        )                                                  # (M, Bc)
+        rows = i * chunk + hashing.hash_mod(hsh, chunk)    # (M, Bc)
+        signs = hashing.hash_to_unit_sign(hsh)             # (M, Bc)
+        onehot = (r_iota[None, :, None] == rows[:, None, :]).astype(jnp.float32)
+        phi = phi + onehot * signs[:, None, :]
+    return phi
+
+
+def flashsketch_ref(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
+    """Y = S A for S ~ BLOCKPERM-SJLT(plan). A: (d, n) -> Y: (k, n)."""
+    n = A.shape[1]
+    Ap = pad_input(plan, A).astype(jnp.float32)
+    A_blocks = Ap.reshape(plan.M, plan.Bc, n)
+    pi = wiring.wiring_jnp(plan.seed, plan.M, plan.kappa)   # (κ, M)
+    Y_blocks = jnp.zeros((plan.M, plan.Br, n), jnp.float32)
+    for ell in range(plan.kappa):
+        h_of_g = pi[ell]                                    # (M,)
+        gathered = A_blocks[h_of_g]                         # (M, Bc, n)
+        phi = _phi_all_blocks(plan, h_of_g)                 # (M, Br, Bc)
+        Y_blocks = Y_blocks + jnp.einsum(
+            "gbc,gcn->gbn", phi, gathered, precision=jax.lax.Precision.HIGHEST
+        )
+    Y = Y_blocks.reshape(plan.k_pad, n) * plan.scale
+    return Y[: plan.k]
+
+
+def flashsketch_transpose_ref(plan: BlockPermPlan, Y: jnp.ndarray) -> jnp.ndarray:
+    """X = Sᵀ Y.  Y: (k, n) -> X: (d, n).  (VJP of flashsketch_ref wrt A.)"""
+    n = Y.shape[1]
+    Yp = Y
+    if Y.shape[0] != plan.k_pad:
+        Yp = jnp.pad(Y, ((0, plan.k_pad - Y.shape[0]), (0, 0)))
+    Y_blocks = Yp.reshape(plan.M, plan.Br, n).astype(jnp.float32)
+    pi = wiring.wiring_jnp(plan.seed, plan.M, plan.kappa)
+    X_blocks = jnp.zeros((plan.M, plan.Bc, n), jnp.float32)
+    for ell in range(plan.kappa):
+        h_of_g = pi[ell]
+        phi = _phi_all_blocks(plan, h_of_g)                 # (M, Br, Bc)
+        contrib = jnp.einsum(
+            "gbc,gbn->gcn", phi, Y_blocks, precision=jax.lax.Precision.HIGHEST
+        )                                                   # (M, Bc, n)
+        X_blocks = X_blocks.at[h_of_g].add(contrib)
+    X = X_blocks.reshape(plan.d_pad, n) * plan.scale
+    return X[: plan.d]
+
+
+# ---------------------------------------------------------------------------
+# FLASHBLOCKROW (paper App. C): fast-but-fragile gather variant.
+# Wiring is iid block sampling per output block (collisions possible); the
+# intra-block pattern has s nonzeros per *row* (not per column) => no
+# column-regularity, no OSE guarantee. Extra √(d/k) scaling (Alg. 2).
+# ---------------------------------------------------------------------------
+
+def blockrow_wiring(plan: BlockPermPlan) -> jnp.ndarray:
+    """(κ, M) iid input-block choices for FLASHBLOCKROW."""
+    g = jnp.arange(plan.M, dtype=jnp.uint32)[None, :]
+    ell = jnp.arange(plan.kappa, dtype=jnp.uint32)[:, None]
+    hsh = hashing.hash_words(
+        np.uint32(plan.seed), np.uint32(0xB10C), ell, g
+    )
+    return hashing.hash_mod(hsh, plan.M)                    # (κ, M) int32
+
+
+def _phi_rows_all_blocks(plan: BlockPermPlan, h_of_g: jnp.ndarray) -> jnp.ndarray:
+    """Per-row sampling pattern: (M, Br, Bc) with s ±1 entries per row."""
+    g = jnp.arange(plan.M, dtype=jnp.int32)[:, None]        # (M, 1)
+    r = jnp.arange(plan.Br, dtype=jnp.int32)[None, :]       # (1, Br)
+    c_iota = jnp.arange(plan.Bc, dtype=jnp.int32)           # (Bc,)
+    phi = jnp.zeros((plan.M, plan.Br, plan.Bc), jnp.float32)
+    for t in range(plan.s):
+        hsh = hashing.hash_words(
+            np.uint32(plan.seed),
+            np.uint32(0x5EED),
+            g.astype(jnp.uint32),
+            h_of_g[:, None].astype(jnp.uint32),
+            r.astype(jnp.uint32),
+            np.uint32(t),
+        )                                                   # (M, Br)
+        cols = hashing.hash_mod(hsh, plan.Bc)               # (M, Br)
+        signs = hashing.hash_to_unit_sign(hsh)              # (M, Br)
+        onehot = (c_iota[None, None, :] == cols[:, :, None]).astype(jnp.float32)
+        phi = phi + onehot * signs[:, :, None]
+    return phi
+
+
+def blockrow_ref(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
+    """FLASHBLOCKROW forward: Y = S_row A with the Alg. 2 scaling."""
+    n = A.shape[1]
+    Ap = pad_input(plan, A).astype(jnp.float32)
+    A_blocks = Ap.reshape(plan.M, plan.Bc, n)
+    hh = blockrow_wiring(plan)                              # (κ, M)
+    Y_blocks = jnp.zeros((plan.M, plan.Br, n), jnp.float32)
+    for ell in range(plan.kappa):
+        h_of_g = hh[ell]
+        gathered = A_blocks[h_of_g]
+        phi = _phi_rows_all_blocks(plan, h_of_g)
+        Y_blocks = Y_blocks + jnp.einsum(
+            "gbc,gcn->gbn", phi, gathered, precision=jax.lax.Precision.HIGHEST
+        )
+    scale = plan.scale * math.sqrt(plan.d_pad / plan.k_pad)
+    Y = Y_blocks.reshape(plan.k_pad, n) * scale
+    return Y[: plan.k]

@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture × input shape) cell, lower + compile the train /
+serve step on the production mesh — 16×16 (single pod, 256 chips) and
+2×16×16 (two pods, 512 chips) — and record memory_analysis, cost_analysis
+and the roofline terms (parsed from the optimized HLO, loop-body-aware).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+
+Results land in experiments/dryrun/*.json (one per cell×mesh) and are
+aggregated into EXPERIMENTS.md by benchmarks/roofline_table.py.
+"""
+import argparse
+import gzip
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES_BY_NAME, shape_applicable, ShapeConfig
+from repro.configs.registry import ARCHS, all_cells
+from repro.launch import mesh as mesh_lib
+from repro.models.factory import train_batch_specs
+from repro.optim import adamw
+from repro.roofline import analysis
+from repro.sharding import partition as pt
+from repro.train import train_step as ts
+
+OUTDIR = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def lower_train_cell(cfg, shape, mesh, ctx):
+    """Lower+compile one training cell. Returns compiled executable."""
+    opt_cfg = adamw.AdamWConfig(state_dtype=cfg.optstate_dtype)
+    step_fn, model = ts.build_train_step(cfg, opt_cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = pt.param_pspecs(params_shape, ctx)
+    opt_shape = jax.eval_shape(
+        lambda p: adamw.init_state(p, opt_cfg), params_shape)
+    opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+    batch_shape = train_batch_specs(cfg, shape)
+    batch_specs = {
+        k: P(ctx.batch_axes, *([None] * (len(v.shape) - 1)))
+        for k, v in batch_shape.items()
+    }
+    err_shape = jax.tree.map(lambda x: jax.ShapeDtypeStruct((1,), jnp.float32),
+                             {})  # compression off in baseline dry-run
+
+    def step(params, opt_state, batch):
+        p2, o2, _, metrics = step_fn(params, opt_state, {}, batch)
+        return p2, o2, metrics["loss"]
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, opt_specs),
+                      _ns(mesh, batch_specs)),
+        out_shardings=(_ns(mesh, pspecs), _ns(mesh, opt_specs),
+                       NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+    lowered = jitted.lower(params_shape, opt_shape, batch_shape)
+    return lowered.compile()
+
+
+def lower_prefill_cell(cfg, shape, mesh, ctx):
+    model = ts.build_serve_step(cfg)[1]
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = pt.param_pspecs(params_shape, ctx)
+    B, S = shape.global_batch, shape.seq_len
+    tok_shape = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    extra_shape = {}
+    extra_specs = {}
+    if cfg.family == "encdec":
+        extra_shape["encoder_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        extra_specs["encoder_frames"] = P(ctx.batch_axes, None, None)
+    if cfg.family == "vlm":
+        extra_shape["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.image_tokens, cfg.d_model), jnp.float32)
+        extra_specs["image_embeds"] = P(ctx.batch_axes, None, None)
+
+    def step(params, tokens, extra):
+        return model.prefill(params, tokens, extra)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(_ns(mesh, pspecs),
+                      NamedSharding(mesh, P(ctx.batch_axes, None)),
+                      _ns(mesh, extra_specs)),
+        out_shardings=NamedSharding(mesh, P(ctx.batch_axes, "model")),
+    )
+    return jitted.lower(params_shape, tok_shape, extra_shape).compile()
+
+
+def lower_decode_cell(cfg, shape, mesh, ctx):
+    serve_fn, model = ts.build_serve_step(cfg)
+    out = ts.decode_state_specs(cfg, mesh, model, shape)
+    _, params_shape, pspecs, state_shape, state_specs, _extra = out
+    B = shape.global_batch
+    tok_shape = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    data_size = 1
+    for a in ctx.batch_axes:
+        data_size *= mesh.shape[a]
+    b_ax = ctx.batch_axes if B % data_size == 0 else None
+
+    jitted = jax.jit(
+        serve_fn,
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, state_specs),
+                      NamedSharding(mesh, P(b_ax, None)),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, P(b_ax, None, "model")),
+                       _ns(mesh, state_specs)),
+        donate_argnums=(1,),
+    )
+    return jitted.lower(params_shape, state_shape, tok_shape, pos_shape).compile()
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             skip_existing: bool = True, verbose: bool = True):
+    cfg = ARCHS[arch_name]
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "pod512" if multi_pod else "pod256"
+    outpath = os.path.join(OUTDIR, f"{cfg.name}_{shape.name}_{mesh_name}.json")
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+               "status": "skip", "reason": reason}
+        os.makedirs(OUTDIR, exist_ok=True)
+        with open(outpath, "w") as f:
+            json.dump(rec, f, indent=2)
+        if verbose:
+            print(f"[dryrun] {cfg.name} × {shape.name} × {mesh_name}: {reason}")
+        return rec
+    if skip_existing and os.path.exists(outpath):
+        with open(outpath) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            if verbose:
+                print(f"[dryrun] {cfg.name} × {shape.name} × {mesh_name}: cached")
+            return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    ctx = ts.sharding_ctx_for(mesh, cfg)
+    t0 = time.time()
+    try:
+        with mesh, pt.activate(ctx):
+            if shape.kind == "train":
+                compiled = lower_train_cell(cfg, shape, mesh, ctx)
+            elif shape.kind == "prefill":
+                compiled = lower_prefill_cell(cfg, shape, mesh, ctx)
+            else:
+                compiled = lower_decode_cell(cfg, shape, mesh, ctx)
+        ma = compiled.memory_analysis()
+        rep = analysis.analyze_compiled(
+            compiled, cfg, shape, mesh_name, mesh.devices.size)
+        rec = rep.to_json()
+        rec.update(status="ok", compile_s=time.time() - t0,
+                   memory_analysis=str(ma))
+        # archive the optimized HLO so roofline analysis can be re-run (and
+        # hillclimb iterations inspected) without recompiling
+        os.makedirs(OUTDIR, exist_ok=True)
+        with gzip.open(os.path.join(
+                OUTDIR, f"{cfg.name}_{shape.name}_{mesh_name}.hlo.gz"),
+                "wt") as zf:
+            zf.write(compiled.as_text())
+        if verbose:
+            print(f"[dryrun] {cfg.name} × {shape.name} × {mesh_name}: OK "
+                  f"({rec['compile_s']:.0f}s compile) "
+                  f"compute={rep.compute_s*1e3:.1f}ms "
+                  f"memory={rep.memory_s*1e3:.1f}ms "
+                  f"coll={rep.collective_s*1e3:.1f}ms "
+                  f"bottleneck={rep.bottleneck} "
+                  f"mem/dev={(rep.arg_bytes_per_device+rep.temp_bytes_per_device)/2**30:.2f}GiB")
+            print(f"         memory_analysis: {ma}")
+            print(f"         cost_analysis(flops/device): "
+                  f"{compiled.cost_analysis().get('flops', 0):.3e} "
+                  f"(walker: {rep.device_flops:.3e})")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+               "status": "fail", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:],
+               "compile_s": time.time() - t0}
+        if verbose:
+            print(f"[dryrun] {cfg.name} × {shape.name} × {mesh_name}: "
+                  f"FAIL {type(e).__name__}: {str(e)[:200]}")
+    os.makedirs(OUTDIR, exist_ok=True)
+    with open(outpath, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def reanalyze_all():
+    """Recompute roofline records from archived HLO (after analyzer changes)."""
+    import glob
+    from repro.roofline import hlo_parse
+    n = 0
+    for path in glob.glob(os.path.join(OUTDIR, "*.hlo.gz")):
+        base = path[:-len(".hlo.gz")]
+        jpath = base + ".json"
+        if not os.path.exists(jpath):
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        cfg = ARCHS[rec["arch"]]
+        shape = SHAPES_BY_NAME[rec["shape"]]
+        with gzip.open(path, "rt") as zf:
+            text = zf.read()
+        cost = hlo_parse.entry_cost(text, rec["chips"])
+        rep = analysis.RooflineReport(
+            arch=cfg.name, shape=shape.name, mesh=rec["mesh"],
+            chips=rec["chips"], device_flops=cost.flops,
+            device_hbm_bytes=cost.hbm_bytes,
+            device_coll_bytes=cost.coll_wire_bytes,
+            coll_breakdown=dict(cost.coll_bytes),
+            model_flops=analysis.model_flops_for(cfg, shape),
+            arg_bytes_per_device=rec.get("arg_bytes_per_device", 0.0),
+            temp_bytes_per_device=rec.get("temp_bytes_per_device", 0.0),
+            note=rec.get("note", ""),
+        ).finish()
+        new_rec = rep.to_json()
+        new_rec.update(status="ok", compile_s=rec.get("compile_s"),
+                       memory_analysis=rec.get("memory_analysis"))
+        with open(jpath, "w") as f:
+            json.dump(new_rec, f, indent=2)
+        n += 1
+    print(f"[dryrun] reanalyzed {n} records")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (or --all)")
+    ap.add_argument("--shape", default=None,
+                    help="train_4k|prefill_32k|decode_32k|long_500k")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--no-skip-existing", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute records from archived HLO, no compiles")
+    args = ap.parse_args(argv)
+    if args.reanalyze:
+        reanalyze_all()
+        return 0
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod]
+    results = []
+    if args.all:
+        for cfg, shape, ok, reason in all_cells():
+            for mp in meshes:
+                results.append(run_cell(cfg.name, shape.name, mp,
+                                        not args.no_skip_existing))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        for mp in meshes:
+            results.append(run_cell(args.arch, args.shape, mp,
+                                    not args.no_skip_existing))
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_skip = sum(1 for r in results if r.get("status") == "skip")
+    n_fail = sum(1 for r in results if r.get("status") == "fail")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,170 @@
+"""Encoder-decoder model (seamless-m4t backbone; audio frontend stubbed).
+
+Encoder: bidirectional self-attn + SwiGLU over precomputed frame embeddings
+(the assignment's modality-frontend stub).  Decoder: causal self-attn +
+cross-attn over encoder memory + SwiGLU.  Decode path caches self K/V and
+the (fixed) cross K/V per layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers
+from repro.sharding import partition as pt
+
+
+def _init_enc_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.ones_init(cfg.d_model),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "ln2": layers.ones_init(cfg.d_model),
+        "ffn": layers.init_ffn(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_block(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layers.ones_init(cfg.d_model),
+        "self_attn": attn.init_attention(k1, cfg, dtype),
+        "ln_x": layers.ones_init(cfg.d_model),
+        "xattn": attn.init_attention(k2, cfg, dtype, cross=True),
+        "ln2": layers.ones_init(cfg.d_model),
+        "ffn": layers.init_ffn(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = layers.dtype_of(cfg.param_dtype)
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg, dtype = self.cfg, self.dtype
+        k = jax.random.split(key, 6)
+        enc = jax.vmap(lambda kk: _init_enc_block(kk, cfg, dtype))(
+            jax.random.split(k[0], cfg.encoder_layers))
+        dec = jax.vmap(lambda kk: _init_dec_block(kk, cfg, dtype))(
+            jax.random.split(k[1], cfg.n_layers))
+        return {
+            "embed": layers.embed_init(k[2], cfg.vocab_padded, cfg.d_model, dtype),
+            "enc_blocks": enc,
+            "enc_norm": layers.ones_init(cfg.d_model),
+            "dec_blocks": dec,
+            "final_norm": layers.ones_init(cfg.d_model),
+            "lm_head": layers.embed_init(k[3], cfg.vocab_padded, cfg.d_model, dtype),
+        }
+
+    # -------------------------------------------------------------- encoder
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames: (B, T_enc, D) stub embeddings -> encoder memory."""
+        cfg = self.cfg
+        x = pt.shard_residual(frames.astype(self.dtype))
+
+        def body(p, xx):
+            h = layers.rms_norm(xx, p["ln1"])
+            h = attn.attention_apply(p["attn"], cfg, h, causal=False)
+            xx = pt.shard_residual(xx + h)
+            h2 = layers.ffn_apply(p["ffn"], layers.rms_norm(xx, p["ln2"]))
+            return pt.shard_residual(xx + h2)
+
+        f = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(lambda c, p: (f(p, c), None), x, params["enc_blocks"])
+        return layers.rms_norm(x, params["enc_norm"])
+
+    # -------------------------------------------------------------- decoder
+    def hidden(self, params, tokens: jnp.ndarray,
+               extra: Optional[Dict[str, jnp.ndarray]] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        memory = self.encode(params, extra["encoder_frames"])
+        B, S = tokens.shape
+        x = pt.shard_residual(params["embed"][tokens])
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+        def body(p, xx):
+            h = layers.rms_norm(xx, p["ln1"])
+            h = attn.attention_apply(p["self_attn"], cfg, h, positions=positions)
+            xx = pt.shard_residual(xx + h)
+            h = layers.rms_norm(xx, p["ln_x"])
+            h = attn.attention_apply(p["xattn"], cfg, h, kv_src=memory, causal=False)
+            xx = pt.shard_residual(xx + h)
+            h2 = layers.ffn_apply(p["ffn"], layers.rms_norm(xx, p["ln2"]))
+            return pt.shard_residual(xx + h2)
+
+        f = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(lambda c, p: (f(p, c), None), x, params["dec_blocks"])
+        return layers.rms_norm(x, params["final_norm"]), jnp.float32(0.0)
+
+    def apply(self, params, tokens: jnp.ndarray,
+              extra: Optional[Dict[str, jnp.ndarray]] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        x, aux = self.hidden(params, tokens, extra)
+        logits = layers.unembed_logits(x, params["lm_head"])
+        return pt.shard_logits(logits), aux
+
+    def prefill(self, params, tokens: jnp.ndarray,
+                extra: Optional[Dict[str, jnp.ndarray]] = None):
+        x, _ = self.hidden(params, tokens, extra)
+        return layers.unembed_logits(x[:, -1:, :], params["lm_head"])[:, 0, :]
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        x, aux = self.hidden(params, batch["tokens"],
+                             {"encoder_frames": batch["encoder_frames"]})
+        ce = layers.softmax_xent_chunked(x, params["lm_head"], batch["labels"])
+        return ce, {"ce": ce, "aux": aux}
+
+    # --------------------------------------------------------------- decode
+    def init_decode_state(self, params, batch: int, max_seq: int,
+                          extra: Optional[Dict[str, jnp.ndarray]] = None):
+        cfg, dtype = self.cfg, self.dtype
+        memory = self.encode(params, extra["encoder_frames"])
+        hd = cfg.resolved_head_dim
+
+        def cross_kv(p):
+            k = (memory @ p["xattn"]["wk"]).reshape(batch, -1, cfg.n_kv_heads, hd)
+            v = (memory @ p["xattn"]["wv"]).reshape(batch, -1, cfg.n_kv_heads, hd)
+            return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+        ck, cv = jax.vmap(cross_kv)(params["dec_blocks"])
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, hd)
+        return {
+            "kv": attn.KVCache(k=pt.shard_kv(jnp.zeros(shape, dtype)),
+                               v=pt.shard_kv(jnp.zeros(shape, dtype))),
+            "cross_kv": (ck, cv),
+        }
+
+    def decode_step(self, params, state, tokens: jnp.ndarray, pos):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        ck, cv = state["cross_kv"]
+        hd = cfg.resolved_head_dim
+
+        def body(xx, inp):
+            p, kv, ckk, cvv = inp
+            h = layers.rms_norm(xx, p["ln1"])
+            h, kv_new = attn.decode_attention(p["self_attn"], cfg, h, kv, pos)
+            xx = xx + h
+            # cross attention against fixed memory K/V
+            h = layers.rms_norm(xx, p["ln_x"])
+            B = h.shape[0]
+            q = (h @ p["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+            Hkv = cfg.n_kv_heads
+            G = cfg.n_heads // Hkv
+            qh = q.reshape(B, 1, Hkv, G, hd)
+            sc = jnp.einsum("bshgd,bhtd->bhgst", qh, ckk).astype(jnp.float32)
+            pr = jax.nn.softmax(sc / jnp.sqrt(jnp.float32(hd)), -1).astype(cvv.dtype)
+            o = jnp.einsum("bhgst,bhtd->bshgd", pr, cvv)
+            o = o.reshape(B, 1, cfg.n_heads * hd) @ p["xattn"]["wo"]
+            xx = xx + o
+            h2 = layers.ffn_apply(p["ffn"], layers.rms_norm(xx, p["ln2"]))
+            return xx + h2, kv_new
+
+        x, kv_new = jax.lax.scan(body, x, (params["dec_blocks"], state["kv"], ck, cv))
+        x = layers.rms_norm(x, params["final_norm"])
+        logits = layers.unembed_logits(x, params["lm_head"])
+        return logits, {"kv": kv_new, "cross_kv": (ck, cv)}

@@ -1,0 +1,65 @@
+"""Model factory + input_specs (ShapeDtypeStruct stand-ins for the dry-run)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.lm import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one global training batch."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.image_tokens, cfg.d_model), jnp.float32)
+    return specs
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def extra_inputs_concrete(cfg: ModelConfig, batch: int, seq: int, key=None):
+    """Concrete (small) modality-stub inputs for smoke tests."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["encoder_frames"] = jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        extra["image_embeds"] = jax.random.normal(
+            key, (batch, cfg.image_tokens, cfg.d_model), jnp.float32)
+    return extra
+
+
+def make_train_batch(cfg: ModelConfig, batch: int, seq: int, key):
+    """Concrete random batch for smoke tests / examples."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size, jnp.int32),
+    }
+    out.update(extra_inputs_concrete(cfg, batch, seq, k3))
+    return out

@@ -1,0 +1,456 @@
+"""Unified decoder LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layer stacks are stacked-on-leading-axis pytrees driven by ``jax.lax.scan``
+(+ optional ``jax.checkpoint`` remat), so lowered HLO size is O(1) in depth.
+Activation sharding constraints come from ``repro.sharding.partition``
+(no-ops outside a mesh context, so CPU smoke tests run unchanged).
+
+Families:
+  dense   — [ln→GQA-attn] + [ln→SwiGLU]
+  moe     — [ln→GQA-attn] + [ln→MoE (+ optional dense residual branch)]
+  ssm     — RWKV6 blocks (time-mix + channel-mix)
+  hybrid  — Mamba2 stack with a *shared* (weight-tied) attention+FFN block
+            applied after every ``attn_every`` SSM layers (zamba2)
+  vlm     — dense stack with cross-attention image layers every Nth layer
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers, moe, ssm
+from repro.sharding import partition as pt
+
+
+def _split_keys(key, n):
+    return jax.random.split(key, n)
+
+
+# ===========================================================================
+# per-layer init (vmapped over the stack)
+# ===========================================================================
+
+def _init_dense_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = _split_keys(key, 2)
+    return {
+        "ln1": layers.ones_init(cfg.d_model),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "ln2": layers.ones_init(cfg.d_model),
+        "ffn": layers.init_ffn(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_moe_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = _split_keys(key, 2)
+    return {
+        "ln1": layers.ones_init(cfg.d_model),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "ln2": layers.ones_init(cfg.d_model),
+        "moe": moe.init_moe(k2, cfg, dtype),
+    }
+
+
+def _init_rwkv_block(key, cfg: ModelConfig, dtype):
+    return {
+        "ln1": layers.ones_init(cfg.d_model),
+        "rwkv": ssm.init_rwkv6(key, cfg, dtype),
+        "ln2": layers.ones_init(cfg.d_model),
+    }
+
+
+def _init_mamba_block(key, cfg: ModelConfig, dtype):
+    return {
+        "ln1": layers.ones_init(cfg.d_model),
+        "mamba": ssm.init_mamba2(key, cfg, dtype),
+    }
+
+
+def _init_cross_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = _split_keys(key, 2)
+    return {
+        "ln1": layers.ones_init(cfg.d_model),
+        "xattn": attn.init_attention(k1, cfg, dtype, cross=True),
+        "ln2": layers.ones_init(cfg.d_model),
+        "ffn": layers.init_ffn(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+# ===========================================================================
+# block applies (train/prefill)
+# ===========================================================================
+
+def _dense_block_apply(p, cfg, x, positions):
+    h = layers.rms_norm(x, p["ln1"])
+    h = attn.attention_apply(p["attn"], cfg, h, positions=positions)
+    x = pt.shard_residual(x + h)
+    h2 = layers.ffn_apply(p["ffn"], layers.rms_norm(x, p["ln2"]))
+    return pt.shard_residual(x + h2), jnp.float32(0.0)
+
+
+def _moe_block_apply(p, cfg, x, positions):
+    h = layers.rms_norm(x, p["ln1"])
+    h = attn.attention_apply(p["attn"], cfg, h, positions=positions)
+    x = pt.shard_residual(x + h)
+    h2, aux = moe.moe_apply(p["moe"], cfg, layers.rms_norm(x, p["ln2"]))
+    return pt.shard_residual(x + h2), aux
+
+
+def _rwkv_block_apply(p, cfg, x, positions):
+    h, _ = ssm.rwkv6_time_mix(p["rwkv"], cfg, layers.rms_norm(x, p["ln1"]))
+    x = pt.shard_residual(x + h)
+    h2, _ = ssm.rwkv6_channel_mix(p["rwkv"], cfg, layers.rms_norm(x, p["ln2"]))
+    return pt.shard_residual(x + h2), jnp.float32(0.0)
+
+
+def _mamba_block_apply(p, cfg, x):
+    h = ssm.mamba2_apply(p["mamba"], cfg, layers.rms_norm(x, p["ln1"]))
+    return pt.shard_residual(x + h), jnp.float32(0.0)
+
+
+def _shared_attn_apply(p, cfg, x, positions):
+    h = layers.rms_norm(x, p["ln1"])
+    h = attn.attention_apply(p["attn"], cfg, h, positions=positions)
+    x = pt.shard_residual(x + h)
+    h2 = layers.ffn_apply(p["ffn"], layers.rms_norm(x, p["ln2"]))
+    return pt.shard_residual(x + h2)
+
+
+def _cross_block_apply(p, cfg, x, img):
+    h = layers.rms_norm(x, p["ln1"])
+    h = attn.attention_apply(p["xattn"], cfg, h, kv_src=img, causal=False)
+    x = pt.shard_residual(x + h)
+    h2 = layers.ffn_apply(p["ffn"], layers.rms_norm(x, p["ln2"]))
+    return pt.shard_residual(x + h2)
+
+
+# ===========================================================================
+# model
+# ===========================================================================
+
+class DecoderLM:
+    """Family-dispatching decoder LM (see module docstring)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = layers.dtype_of(cfg.param_dtype)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg, dtype = self.cfg, self.dtype
+        keys = _split_keys(key, 8)
+        params: Dict[str, Any] = {
+            "embed": layers.embed_init(keys[0], cfg.vocab_padded, cfg.d_model, dtype),
+            "final_norm": layers.ones_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.embed_init(
+                keys[1], cfg.vocab_padded, cfg.d_model, dtype)
+
+        def stack(init_fn, key, n):
+            return jax.vmap(lambda k: init_fn(k, cfg, dtype))(_split_keys(key, n))
+
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            fn = _init_moe_block if fam == "moe" else _init_dense_block
+            params["blocks"] = stack(fn, keys[2], cfg.n_layers)
+        elif fam == "ssm":
+            params["blocks"] = stack(_init_rwkv_block, keys[2], cfg.n_layers)
+        elif fam == "hybrid":
+            n_super = cfg.n_layers // cfg.attn_every
+            tail = cfg.n_layers - n_super * cfg.attn_every
+            inner = stack(_init_mamba_block, keys[2], n_super * cfg.attn_every)
+            params["blocks"] = jax.tree.map(
+                lambda a: a.reshape(n_super, cfg.attn_every, *a.shape[1:]), inner)
+            if tail:
+                params["tail_blocks"] = stack(_init_mamba_block, keys[3], tail)
+            params["shared_attn"] = {
+                "ln1": layers.ones_init(cfg.d_model),
+                "attn": attn.init_attention(keys[4], cfg, dtype),
+                "ln2": layers.ones_init(cfg.d_model),
+                "ffn": layers.init_ffn(keys[5], cfg.d_model, cfg.d_ff, dtype),
+            }
+        elif fam == "vlm":
+            per = cfg.cross_attn_every
+            n_super = cfg.n_layers // per
+            selfs = stack(_init_dense_block, keys[2], n_super * (per - 1))
+            params["blocks"] = jax.tree.map(
+                lambda a: a.reshape(n_super, per - 1, *a.shape[1:]), selfs)
+            params["cross_blocks"] = stack(_init_cross_block, keys[3], n_super)
+        else:
+            raise ValueError(f"family {fam} handled by a different model class")
+        return params
+
+    # ------------------------------------------------------------- backbone
+    def _backbone(self, params, x, positions, extra) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(B,S,D) -> (B,S,D), aux_loss."""
+        cfg = self.cfg
+        fam = cfg.family
+        remat = cfg.remat
+
+        def scan_blocks(body, x, blocks):
+            f = jax.checkpoint(body) if remat else body
+
+            def step(carry, p):
+                xx, aux = carry
+                xx, a = f(p, xx)
+                return (xx, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)), blocks)
+            return x, aux
+
+        if fam in ("dense", "moe"):
+            apply_fn = _moe_block_apply if fam == "moe" else _dense_block_apply
+            body = lambda p, xx: apply_fn(p, cfg, xx, positions)
+            return scan_blocks(body, x, params["blocks"])
+
+        if fam == "ssm":
+            body = lambda p, xx: _rwkv_block_apply(p, cfg, xx, positions)
+            return scan_blocks(body, x, params["blocks"])
+
+        if fam == "hybrid":
+            shared = params["shared_attn"]
+
+            def super_body(p_group, xx):
+                def inner(pp, xxx):
+                    return _mamba_block_apply(pp, cfg, xxx)
+                xx, aux = scan_blocks(inner, xx, p_group)
+                xx = _shared_attn_apply(shared, cfg, xx, positions)
+                return xx, aux
+
+            f = jax.checkpoint(super_body) if remat else super_body
+
+            def step(carry, p_group):
+                xx, aux = carry
+                xx, a = f(p_group, xx)
+                return (xx, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)), params["blocks"])
+            if "tail_blocks" in params:
+                x, a2 = scan_blocks(
+                    lambda pp, xxx: _mamba_block_apply(pp, cfg, xxx),
+                    x, params["tail_blocks"])
+                aux = aux + a2
+            return x, aux
+
+        if fam == "vlm":
+            img = extra["image_embeds"].astype(x.dtype)
+
+            def super_body(ps, xx):
+                p_self, p_cross = ps
+
+                def inner(pp, xxx):
+                    return _dense_block_apply(pp, cfg, xxx, positions)
+                xx, aux = scan_blocks(inner, xx, p_self)
+                xx = _cross_block_apply(p_cross, cfg, xx, img)
+                return xx, aux
+
+            f = jax.checkpoint(super_body) if remat else super_body
+
+            def step(carry, ps):
+                xx, aux = carry
+                xx, a = f(ps, xx)
+                return (xx, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(
+                step, (x, jnp.float32(0.0)),
+                (params["blocks"], params["cross_blocks"]))
+            return x, aux
+
+        raise ValueError(fam)
+
+    # ---------------------------------------------------------------- apply
+    def hidden(self, params, tokens: jnp.ndarray,
+               extra: Optional[Dict[str, jnp.ndarray]] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """tokens (B,S) -> final-norm hidden (B,S,D), aux loss."""
+        B, S = tokens.shape
+        x = params["embed"][tokens]                    # (B,S,D)
+        x = pt.shard_residual(x)
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x, aux = self._backbone(params, x, positions, extra or {})
+        return layers.rms_norm(x, params["final_norm"]), aux
+
+    def _head(self, params):
+        return params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
+
+    def apply(self, params, tokens: jnp.ndarray,
+              extra: Optional[Dict[str, jnp.ndarray]] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """tokens (B,S) -> logits (B,S,V_pad) f32, aux loss.  (Tests / small
+        shapes only — training uses the chunked CE that never materializes
+        full logits.)"""
+        x, aux = self.hidden(params, tokens, extra)
+        logits = layers.unembed_logits(x, self._head(params))
+        return pt.shard_logits(logits), aux
+
+    def prefill(self, params, tokens: jnp.ndarray,
+                extra: Optional[Dict[str, jnp.ndarray]] = None):
+        """Prefill step: last-position logits only (B,V)."""
+        x, _ = self.hidden(params, tokens, extra)
+        last = x[:, -1:, :]
+        return layers.unembed_logits(last, self._head(params))[:, 0, :]
+
+    def loss(self, params, batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict]:
+        x, aux = self.hidden(params, batch["tokens"],
+                             {k: v for k, v in batch.items()
+                              if k not in ("tokens", "labels")})
+        ce = layers.softmax_xent_chunked(x, self._head(params), batch["labels"])
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # --------------------------------------------------------------- decode
+    def init_decode_state(self, params, batch: int, max_seq: int,
+                          extra: Optional[Dict[str, jnp.ndarray]] = None):
+        cfg, dtype = self.cfg, self.dtype
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            return {"kv": self._stacked_kv(cfg.n_layers, batch, max_seq)}
+        if fam == "ssm":
+            mk = lambda _: ssm.init_rwkv6_state(cfg, batch, dtype)
+            states = [mk(i) for i in range(cfg.n_layers)]
+            return {"rwkv": jax.tree.map(lambda *xs: jnp.stack(xs), *states)}
+        if fam == "hybrid":
+            n_super = cfg.n_layers // cfg.attn_every
+            tail = cfg.n_layers - n_super * cfg.attn_every
+            mstates = [ssm.init_mamba2_state(cfg, batch, dtype)
+                       for _ in range(n_super * cfg.attn_every)]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *mstates)
+            stacked = jax.tree.map(
+                lambda a: a.reshape(n_super, cfg.attn_every, *a.shape[1:]), stacked)
+            st = {"mamba": stacked,
+                  "attn_kv": self._stacked_kv(n_super, batch, max_seq)}
+            if tail:
+                tstates = [ssm.init_mamba2_state(cfg, batch, dtype)
+                           for _ in range(tail)]
+                st["mamba_tail"] = jax.tree.map(lambda *xs: jnp.stack(xs), *tstates)
+            return st
+        if fam == "vlm":
+            per = cfg.cross_attn_every
+            n_super = cfg.n_layers // per
+            img = extra["image_embeds"].astype(dtype)
+            # precompute cross K/V once per cross layer
+            def cross_kv(p):
+                hd = cfg.resolved_head_dim
+                k = (img @ p["xattn"]["wk"]).reshape(batch, -1, cfg.n_kv_heads, hd)
+                v = (img @ p["xattn"]["wv"]).reshape(batch, -1, cfg.n_kv_heads, hd)
+                return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+            ck, cv = jax.vmap(cross_kv)(params["cross_blocks"])
+            return {
+                "kv": self._stacked_kv(n_super * (per - 1), batch, max_seq,
+                                       reshape=(n_super, per - 1)),
+                "cross_kv": (ck, cv),
+            }
+        raise ValueError(fam)
+
+    def _stacked_kv(self, n: int, batch: int, max_seq: int, reshape=None):
+        cfg, dtype = self.cfg, self.dtype
+        hd = cfg.resolved_head_dim
+        shape = (n, batch, cfg.n_kv_heads, max_seq, hd)
+        if reshape:
+            shape = (*reshape, batch, cfg.n_kv_heads, max_seq, hd)
+        return attn.KVCache(k=pt.shard_kv(jnp.zeros(shape, dtype)),
+                            v=pt.shard_kv(jnp.zeros(shape, dtype)))
+
+    def decode_step(self, params, state, tokens: jnp.ndarray, pos):
+        """tokens (B,1) int32; pos scalar int32. -> (logits (B,1,V), new state)."""
+        cfg = self.cfg
+        fam = cfg.family
+        x = params["embed"][tokens]
+        if fam in ("dense", "moe"):
+            def body(xx, inp):
+                p, kv = inp
+                h = layers.rms_norm(xx, p["ln1"])
+                h, kv_new = attn.decode_attention(p["attn"], cfg, h, kv, pos)
+                xx = xx + h
+                h2 = layers.rms_norm(xx, p["ln2"])
+                if fam == "moe":
+                    h2 = moe.moe_decode(p["moe"], cfg, h2)
+                else:
+                    h2 = layers.ffn_apply(p["ffn"], h2)
+                return xx + h2, kv_new
+
+            x, kv_new = jax.lax.scan(body, x, (params["blocks"], state["kv"]))
+            new_state = {"kv": kv_new}
+        elif fam == "ssm":
+            def body(xx, inp):
+                p, st = inp
+                h, st = ssm.rwkv6_decode(p["rwkv"], cfg,
+                                         layers.rms_norm(xx, p["ln1"]), st)
+                xx = xx + h
+                h2, st = ssm.rwkv6_channel_mix_decode(
+                    p["rwkv"], cfg, layers.rms_norm(xx, p["ln2"]), st)
+                return xx + h2, st
+
+            x, st_new = jax.lax.scan(body, x, (params["blocks"], state["rwkv"]))
+            new_state = {"rwkv": st_new}
+        elif fam == "hybrid":
+            shared = params["shared_attn"]
+
+            def mamba_body(xx, inp):
+                p, st = inp
+                h, st = ssm.mamba2_decode(p["mamba"], cfg,
+                                          layers.rms_norm(xx, p["ln1"]), st)
+                return xx + h, st
+
+            def super_body(xx, inp):
+                p_group, st_group, kv = inp
+                xx, st_new = jax.lax.scan(mamba_body, xx, (p_group, st_group))
+                h = layers.rms_norm(xx, shared["ln1"])
+                h, kv_new = attn.decode_attention(shared["attn"], cfg, h, kv, pos)
+                xx = xx + h
+                h2 = layers.ffn_apply(shared["ffn"],
+                                      layers.rms_norm(xx, shared["ln2"]))
+                return xx + h2, (st_new, kv_new)
+
+            x, (m_new, kv_new) = jax.lax.scan(
+                super_body, x, (params["blocks"], state["mamba"], state["attn_kv"]))
+            new_state = {"mamba": m_new, "attn_kv": kv_new}
+            if "tail_blocks" in params:
+                x, t_new = jax.lax.scan(
+                    mamba_body, x, (params["tail_blocks"], state["mamba_tail"]))
+                new_state["mamba_tail"] = t_new
+        elif fam == "vlm":
+            ck, cv = state["cross_kv"]
+
+            def self_body(xx, inp):
+                p, kv = inp
+                h = layers.rms_norm(xx, p["ln1"])
+                h, kv_new = attn.decode_attention(p["attn"], cfg, h, kv, pos)
+                xx = xx + h
+                h2 = layers.ffn_apply(p["ffn"], layers.rms_norm(xx, p["ln2"]))
+                return xx + h2, kv_new
+
+            def super_body(xx, inp):
+                p_self, kv, p_cross, ckk, cvv = inp
+                xx, kv_new = jax.lax.scan(self_body, xx, (p_self, kv))
+                h = layers.rms_norm(xx, p_cross["ln1"])
+                # cross attention against fixed image K/V
+                B = h.shape[0]
+                hd = cfg.resolved_head_dim
+                q = (h @ p_cross["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+                Hkv = cfg.n_kv_heads
+                G = cfg.n_heads // Hkv
+                qh = q.reshape(B, 1, Hkv, G, hd)
+                sc = jnp.einsum("bshgd,bhtd->bhgst", qh, ckk).astype(jnp.float32)
+                pr = jax.nn.softmax(sc / jnp.sqrt(jnp.float32(hd)), -1).astype(cvv.dtype)
+                o = jnp.einsum("bhgst,bhtd->bshgd", pr, cvv)
+                o = o.reshape(B, 1, cfg.n_heads * hd) @ p_cross["xattn"]["wo"]
+                xx = xx + o
+                h2 = layers.ffn_apply(p_cross["ffn"],
+                                      layers.rms_norm(xx, p_cross["ln2"]))
+                return xx + h2, kv_new
+
+            x, kv_new = jax.lax.scan(
+                super_body, x,
+                (params["blocks"], state["kv"], params["cross_blocks"], ck, cv))
+            new_state = {"kv": kv_new, "cross_kv": (ck, cv)}
+        else:
+            raise ValueError(fam)
+
+        x = layers.rms_norm(x, params["final_norm"])
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = layers.unembed_logits(x, head)
+        return logits, new_state

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN: group-local sort-based dispatch (GShard-style EP).
+
+Design for scale (DESIGN.md §6):
+  * tokens are routed *within their group* (group = one batch row), so all
+    dispatch gathers have a batch dimension and never cross the data axis;
+  * the (E, C) expert buffers are the only tensors resharded data->model
+    (the all-to-all of expert parallelism, inserted by SPMD);
+  * expert weights are stacked (E, ...) and sharded over 'model' (EP).
+
+Capacity:  C = ceil(T·k·cf/E) per group — tokens over capacity are dropped
+(their combine weight is 0), standard GShard semantics.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding import partition as pt
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "router": layers.dense_init(k1, d, E, jnp.float32),
+        "wi_gate": layers.dense_init(k2, d, ff, dtype).astype(dtype) * 1.0,
+        "wi_up": layers.dense_init(k3, d, ff, dtype),
+        "wo": layers.dense_init(k4, ff, d, dtype),
+    }
+    # expert-stacked weights (E, ...)
+    kg = jax.random.split(key, 3 * E).reshape(3, E, 2)
+    p["wi_gate"] = jax.vmap(lambda kk: layers.dense_init(kk, d, ff, dtype))(kg[0])
+    p["wi_up"] = jax.vmap(lambda kk: layers.dense_init(kk, d, ff, dtype))(kg[1])
+    p["wo"] = jax.vmap(lambda kk: layers.dense_init(kk, ff, d, dtype))(kg[2])
+    if cfg.dense_residual_ff:
+        kd = jax.random.fold_in(key, 7)
+        p["dense_residual"] = layers.init_ffn(
+            kd, d, cfg.dense_residual_ff, dtype)
+    return p
+
+
+def _route(params, cfg: ModelConfig, x: jnp.ndarray):
+    """x: (G,T,D) -> top-k (ids (G,T,k) int32, gates (G,T,k) f32, aux loss)."""
+    logits = (x.astype(jnp.float32) @ params["router"])          # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.top_k)                 # (G,T,k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch/GShard): E * Σ_e f_e p_e
+    E = cfg.n_experts
+    sel = jax.nn.one_hot(ids[..., 0], E)                          # top-1 assignment
+    f = jnp.mean(sel, axis=(0, 1))
+    p = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f * p)
+    return ids, gates.astype(jnp.float32), aux
+
+
+def moe_apply(params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (G, T, D) -> (out (G,T,D), aux_loss scalar)."""
+    G, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg, T)
+    ids, gates, aux = _route(params, cfg, x)                      # (G,T,K)
+
+    NK = T * K
+    flat_ids = ids.reshape(G, NK)                                 # expert of rep
+    order = jnp.argsort(flat_ids, axis=-1, stable=True)           # (G,NK)
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=-1)
+    # expert segment starts via vectorized searchsorted per group
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E + 1), side="left")
+    )(sorted_ids)                                                 # (G,E+1)
+
+    # gather tokens into (G, E, C, D) buffers
+    slot_src = starts[:, :E, None] + jnp.arange(C)[None, None, :]  # (G,E,C)
+    valid = slot_src < starts[:, 1:, None]                         # within segment
+    slot_src = jnp.minimum(slot_src, NK - 1)
+    rep_idx = jnp.take_along_axis(order, slot_src.reshape(G, -1), axis=-1)
+    tok_idx = (rep_idx // K).reshape(G, E, C)
+    buf = jnp.take_along_axis(
+        x, tok_idx.reshape(G, E * C)[..., None], axis=1
+    ).reshape(G, E, C, D)
+    buf = jnp.where(valid[..., None], buf, 0.0)
+    if G > 1:                             # train/prefill: groups carry 'data'
+        buf = pt.shard_moe_buf(buf)       # EP all-to-all: data -> expert shards
+
+    # expert SwiGLU:  (G,E,C,D) x (E,D,F)
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["wi_gate"]))
+    up = jnp.einsum("gecd,edf->gecf", buf, params["wi_up"])
+    eout = jnp.einsum("gecf,efd->gecd", gate * up, params["wo"])   # (G,E,C,D)
+    # combine-path all-to-all: expert shards -> group-local BEFORE the
+    # un-dispatch gather (which indexes across E·C and must be local)
+    if G > 1:
+        eout = pt.gather_experts(eout)
+
+    # un-dispatch: rank of each rep within its expert
+    inv = jnp.argsort(order, axis=-1)                              # pos in sorted
+    c_of_rep = inv - jnp.take_along_axis(starts[:, :E], flat_ids, axis=-1)
+    rep_valid = c_of_rep < C
+    flat_slot = flat_ids * C + jnp.clip(c_of_rep, 0, C - 1)        # (G,NK)
+    out_rep = jnp.take_along_axis(
+        eout.reshape(G, E * C, D), flat_slot[..., None], axis=1
+    )                                                              # (G,NK,D)
+    out_rep = jnp.where(rep_valid[..., None], out_rep, 0.0)
+    out_rep = out_rep.reshape(G, T, K, D) * gates[..., None].astype(out_rep.dtype)
+    out = jnp.sum(out_rep, axis=2).astype(x.dtype)
+
+    if "dense_residual" in params:                                 # arctic branch
+        out = out + layers.ffn_apply(params["dense_residual"], x)
+    return out, aux * cfg.router_aux_coef
+
+
+def moe_decode(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Decode-path MoE for (B, 1, D): route the B tokens as ONE group through
+    the same sort-based dispatch as training.  Under EP this keeps expert
+    weights resident on their shards (tokens move via all-to-all) instead of
+    gathering K·(D·F) weight matrices per token — decode is memory-bound, so
+    moving tokens (B·D bytes) beats moving experts (K·3·D·F bytes) by ~10³×.
+    """
+    B, S1, D = x.shape
+    out, _aux = moe_apply(params, cfg, x.reshape(1, B, D))
+    return out.reshape(B, S1, D)

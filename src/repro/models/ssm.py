@@ -1,0 +1,433 @@
+"""State-space layers: Mamba2 (chunked SSD) and RWKV6 (Finch).
+
+Mamba2 uses the chunked state-space-duality form: intra-chunk quadratic
+(attention-like, MXU-friendly) + inter-chunk state passing via a scan over
+chunks — O(S·Q) compute with O(S/Q) sequential steps.  RWKV6 training uses a
+time scan (its data-dependent per-channel decay makes the stable chunked form
+a kernel-level project; noted in DESIGN.md — candidate for a Pallas kernel).
+
+Both expose a decode path carrying a recurrent state, which is what makes the
+``long_500k`` cell runnable for the ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+# ===========================================================================
+# Mamba2
+# ===========================================================================
+
+class Mamba2State(NamedTuple):
+    h: jnp.ndarray          # (B, H, P, N) SSM state
+    conv: jnp.ndarray       # (B, K-1, conv_dim) causal-conv tail
+
+
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, H, P, N = mamba2_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": layers.dense_init(k1, d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_kernel, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": layers.ones_init(d_inner),
+        "out_proj": layers.dense_init(k3, d_inner, d, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    d_inner, H, P, N = mamba2_dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def mamba2_apply(params, cfg: ModelConfig, x: jnp.ndarray,
+                 chunk: int = 64) -> jnp.ndarray:
+    """Training/prefill forward. x: (B,S,D) -> (B,S,D). Chunked SSD."""
+    B, S, _ = x.shape
+    d_inner, H, P, N = mamba2_dims(cfg)
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    proj = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"]))
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                          # (H,)
+    log_a = (dt * A).astype(jnp.float32)                                   # (B,S,H) ≤ 0
+
+    # chunked views
+    xs = xs.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cm = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dt_c = dt.reshape(B, nc, Q, H)
+    la = log_a.reshape(B, nc, Q, H)
+    l_cum = jnp.cumsum(la, axis=2)                                         # (B,nc,Q,H)
+    l_tot = l_cum[:, :, -1, :]                                             # (B,nc,H)
+
+    xw = xs * dt_c[..., None]                                              # Δ·x
+    bf = jnp.bfloat16
+
+    # ---- intra-chunk (quadratic, masked) ----
+    CB = jnp.einsum("bnqk,bnsk->bnqs", Cm.astype(bf), Bm.astype(bf),
+                    preferred_element_type=jnp.float32)                    # (B,nc,Q,Q)
+    # decay(q,s) = exp(l_q - l_s) for s ≤ q.  Mask INSIDE the exp: for s > q
+    # ldiff > 0 would overflow and poison gradients through the where.
+    ldiff = l_cum[:, :, :, None, :] - l_cum[:, :, None, :, :]              # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], ldiff, -1e9))
+    # bf16 operands for the MXU contraction (decay ≤ 1 and Δx are tame);
+    # accumulation stays f32 — halves the dominant (B,nc,Q,Q,H) traffic.
+    M = (CB[..., None] * decay).astype(bf)                                 # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bnqsh,bnshp->bnqhp", M, xw.astype(bf),
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk summaries and inter-chunk scan ----
+    w_end = jnp.exp(l_tot[:, :, None, :] - l_cum)                          # (B,nc,Q,H)
+    S_c = jnp.einsum("bnqh,bnqhp,bnqk->bnhpk",
+                     w_end.astype(bf), xw.astype(bf), Bm.astype(bf),
+                     preferred_element_type=jnp.float32)                   # (B,nc,H,P,N)
+
+    # NOTE (§Perf, refuted experiment): folding the y_inter einsum into the
+    # scan body (to avoid stacking h_prevs) measured WORSE (90.5 → 109.7 s):
+    # scan-AD saves the state carries either way, and the fold added
+    # per-iteration reads of the C/l_cum chunks.  Kept the stacked form.
+    def step(h_prev, inputs):
+        s_c, ltot = inputs                                                 # (B,H,P,N),(B,H)
+        h_new = h_prev * jnp.exp(ltot)[:, :, None, None] + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(l_tot, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                                  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bnqk,bnqh,bnhpk->bnqhp",
+                         Cm.astype(bf), jnp.exp(l_cum).astype(bf),
+                         h_prevs.astype(bf),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + params["D"][None, None, :, None] * xs.reshape(B, S, H, P)
+    y = y.reshape(B, S, d_inner)
+    y = layers.rms_norm(y.astype(x.dtype), params["norm_w"])
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype) -> Mamba2State:
+    d_inner, H, P, N = mamba2_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return Mamba2State(
+        h=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+    )
+
+
+def mamba2_decode(params, cfg: ModelConfig, x: jnp.ndarray,
+                  state: Mamba2State):
+    """One-token decode. x: (B,1,D) -> (B,1,D), new state."""
+    B = x.shape[0]
+    d_inner, H, P, N = mamba2_dims(cfg)
+    proj = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    # conv over [tail, new]
+    window = jnp.concatenate([state.conv, xBC], axis=1)       # (B, K, conv)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))[:, None, :]
+    xBC = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = window[:, 1:, :]
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                       # (B,H)
+    xs = xs.reshape(B, H, P).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)                         # (B,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    xw = xs * dt[..., None]
+    h_new = state.h * a[..., None, None] + jnp.einsum("bhp,bk->bhpk", xw, Bv)
+    y = jnp.einsum("bhpk,bk->bhp", h_new, Cv) + params["D"][None, :, None] * xs
+    y = y.reshape(B, 1, d_inner)
+    y = layers.rms_norm(y.astype(x.dtype), params["norm_w"])
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"], Mamba2State(h=h_new, conv=new_conv)
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+class RWKV6State(NamedTuple):
+    wkv: jnp.ndarray        # (B, H, C, C) per-head state (key dim × value dim)
+    shift: jnp.ndarray      # (B, D) previous token embedding (token-shift)
+    ffn_shift: jnp.ndarray  # (B, D) token-shift for channel-mix
+
+
+LORA_DIM = 64
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    C = cfg.ssm_head_dim
+    H = d // C
+    return {
+        # token-shift interpolation weights per projection
+        "mu": (0.5 * jnp.ones((5, d), jnp.float32)).astype(dtype),  # r,k,v,w,g
+        "wr": layers.dense_init(ks[0], d, d, dtype),
+        "wk": layers.dense_init(ks[1], d, d, dtype),
+        "wv": layers.dense_init(ks[2], d, d, dtype),
+        "wg": layers.dense_init(ks[3], d, d, dtype),
+        # data-dependent decay LoRA:  w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "wA": layers.dense_init(ks[4], d, LORA_DIM, dtype),
+        "wB": layers.dense_init(ks[5], LORA_DIM, d, dtype, scale=0.01),
+        "u": (0.5 * jnp.ones((H, C), jnp.float32)),            # bonus
+        "wo": layers.dense_init(ks[6], d, d, dtype),
+        "ln_w": layers.ones_init(d),                            # per-head group norm
+        # channel-mix
+        "mu_ffn": (0.5 * jnp.ones((2, d), jnp.float32)).astype(dtype),
+        "ck": layers.dense_init(ks[7], d, cfg.d_ff, dtype),
+        "cv": layers.dense_init(ks[8], cfg.d_ff, d, dtype),
+        "cr": layers.dense_init(ks[9], d, d, dtype),
+    }
+
+
+def _rwkv_proj(params, cfg, x, x_prev):
+    """Token-shifted projections. x,(B,S,D); x_prev (B,S,D) = x shifted by 1."""
+    xx = x_prev - x
+    mu = params["mu"].astype(x.dtype)
+    xr = x + xx * mu[0]
+    xk = x + xx * mu[1]
+    xv = x + xx * mu[2]
+    xw = x + xx * mu[3]
+    xg = x + xx * mu[4]
+    r = xr @ params["wr"]
+    k = xk @ params["wk"]
+    v = xv @ params["wv"]
+    g = jax.nn.silu(xg @ params["wg"])
+    logw = -jnp.exp(
+        params["w0"]
+        + (jnp.tanh(xw @ params["wA"]) @ params["wB"]).astype(jnp.float32)
+    )                                                          # (B,S,D) ≤ 0
+    # Clamp per-step decay: bounds the intra-chunk exponent range of the
+    # chunked-parallel form (Q·|logw| must stay < exp range).  e^-2.5 per
+    # step is already a ~92% forget; over a 32-step chunk it is total.
+    logw = jnp.maximum(logw, -2.5)
+    return r, k, v, g, logw
+
+
+def _rwkv_heads(x, H, C):
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, C)
+
+
+RWKV_CHUNK = 32          # intra-chunk length Q (exponent range Q·2.5 = 80 < 88)
+# chunks per remat group (nested remat bounds AD memory).  Plain scan
+# (grp=0) was tried and REFUTED: 148 s vs 30 s — scan-AD stacks every
+# chunk's carries+inputs through the layer backward (§Perf iteration 2c).
+RWKV_INNER_GROUP = 8
+
+
+def _wkv_chunk(u, S0, r, k, v, logw):
+    """One chunk of the wkv recurrence in closed (parallel) form.
+
+    All (B,H,Q,C).  S0: (B,H,C,C) state *before* the chunk.  Returns
+    (out (B,H,Q,C_v), S_end).  Factored log-space form:
+
+      out_t = r_t·S_{t-1} + u·(r_t·k_t)·v_t
+      r_t·S_{t-1} = Σ_{s<t} (r_t e^{L_{t-1}}) · (k_s e^{-L_s}) v_s
+                    + (r_t e^{L_{t-1}}) · S0
+      S_end = e^{L_Q}·S0 + e^{L_Q} Σ_s (k_s e^{-L_s}) v_s
+
+    with L_t = Σ_{i≤t} log w_i.  exponents are bounded by Q·|logw|_max
+    (≤ 64 with Q=16, clamp −4) so every factor is f32-representable, and
+    every contraction is a plain MXU einsum — no (Q,Q,C) tensor, no
+    per-step HBM round-trip of the (C,C) state.
+    """
+    B, H, Q, C = r.shape
+    L = jnp.cumsum(logw, axis=2)                       # (B,H,Q,C), ≤ 0
+    L_prev = L - logw                                  # L_{t-1} (L_0 = 0)
+    # bf16 operands for the MXU contractions: bf16 shares f32's 8-bit
+    # exponent, so the e^{±80} decay factors stay representable; products
+    # accumulate in f32 (preferred_element_type).  Halves chunk traffic.
+    bf = jnp.bfloat16
+    r_dec = (r * jnp.exp(L_prev)).astype(bf)           # r_t e^{L_{t-1}}
+    k_dec = (k * jnp.exp(-L)).astype(bf)               # k_s e^{-L_s}
+    v_bf = v.astype(bf)
+    # strict-lower-triangular attention-like scores
+    scores = jnp.einsum("bhqc,bhsc->bhqs", r_dec, k_dec,
+                        preferred_element_type=jnp.float32)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    scores = jnp.where(mask[None, None], scores, 0.0).astype(bf)
+    out = jnp.einsum("bhqs,bhsd->bhqd", scores, v_bf,
+                     preferred_element_type=jnp.float32)
+    out = out + jnp.einsum("bhqc,bhcd->bhqd", r_dec, S0.astype(bf),
+                           preferred_element_type=jnp.float32)
+    bonus = jnp.einsum("bhqc,hc,bhqc->bhq", r, u, k)
+    out = out + bonus[..., None] * v
+    eLQ = jnp.exp(L[:, :, -1, :])                      # (B,H,C)
+    S_acc = jnp.einsum("bhqc,bhqd->bhcd", k_dec, v_bf,
+                       preferred_element_type=jnp.float32)
+    S_end = eLQ[..., None] * (S0 + S_acc)
+    return out, S_end
+
+
+def rwkv6_time_mix(params, cfg: ModelConfig, x: jnp.ndarray,
+                   state: RWKV6State | None = None, chunk: int = RWKV_CHUNK):
+    """Training/prefill time-mixing.  x: (B,S,D).
+
+    §Perf iteration 2: chunked-PARALLEL wkv.  The baseline per-step scan
+    moved the (B,H,C,C) state (plus outer-product temporaries) through HBM
+    every token — 1572 s of memory term on train_4k.  The closed-form chunk
+    (``_wkv_chunk``) touches the state once per Q=16 tokens and turns the
+    inner work into MXU einsums.  Chunks are scanned with nested remat
+    grouping to bound AD memory.
+    """
+    B, S, D = x.shape
+    C = cfg.ssm_head_dim
+    H = D // C
+    if state is None:
+        shift0 = jnp.zeros((B, D), x.dtype)
+        wkv0 = jnp.zeros((B, H, C, C), jnp.float32)
+    else:
+        shift0, wkv0 = state.shift, state.wkv
+    x_prev = jnp.concatenate([shift0[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, logw = _rwkv_proj(params, cfg, x, x_prev)
+    u = params["u"]
+
+    def heads_t(t):        # (B,S,D) -> (B,H,S,C)
+        return t.reshape(B, S, H, C).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    rh, kh, vh = heads_t(r), heads_t(k), heads_t(v)
+    lw = heads_t(logw)
+
+    Q = min(chunk, S)
+    if S % Q == 0 and S > 1:
+        nc = S // Q
+
+        def to_chunks(t):  # (B,H,S,C) -> (nc,B,H,Q,C)
+            return t.reshape(B, H, nc, Q, C).transpose(2, 0, 1, 3, 4)
+
+        xs = tuple(to_chunks(t) for t in (rh, kh, vh, lw))
+
+        def chunk_step(s, ci):
+            rc, kc, vc, lc = ci
+            out, s_new = _wkv_chunk(u, s, rc, kc, vc, lc)
+            return s_new, out
+
+        grp = RWKV_INNER_GROUP
+        if grp and nc % grp == 0 and nc > grp:
+            xs_g = tuple(t.reshape(nc // grp, grp, *t.shape[1:]) for t in xs)
+
+            @jax.checkpoint
+            def group_step(s, cg):
+                return jax.lax.scan(chunk_step, s, cg)
+
+            s_fin, outs = jax.lax.scan(group_step, wkv0, xs_g)
+            outs = outs.reshape(nc, B, H, Q, C)
+        else:
+            s_fin, outs = jax.lax.scan(chunk_step, wkv0, xs)
+        # (nc,B,H,Q,C) -> (B,S,H,C)
+        out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, C)
+    else:
+        out, s_fin = _wkv_chunk(u, wkv0, rh, kh, vh, lw)
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, H, C)
+    out = out.reshape(B, S, D)
+    out = layers.rms_norm(out.astype(x.dtype), params["ln_w"])
+    out = (out * g) @ params["wo"]
+    new_state = (s_fin, x[:, -1, :])
+    return out, new_state
+
+
+def rwkv6_channel_mix(params, cfg: ModelConfig, x: jnp.ndarray,
+                      shift0: jnp.ndarray | None = None):
+    B, S, D = x.shape
+    if shift0 is None:
+        shift0 = jnp.zeros((B, D), x.dtype)
+    x_prev = jnp.concatenate([shift0[:, None, :], x[:, :-1, :]], axis=1)
+    xx = x_prev - x
+    mu = params["mu_ffn"].astype(x.dtype)
+    xk = x + xx * mu[0]
+    xr = x + xx * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"]))
+    out = jax.nn.sigmoid(xr @ params["cr"]) * (kk @ params["cv"])
+    return out, x[:, -1, :]
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype) -> RWKV6State:
+    d = cfg.d_model
+    C = cfg.ssm_head_dim
+    H = d // C
+    return RWKV6State(
+        wkv=jnp.zeros((batch, H, C, C), jnp.float32),
+        shift=jnp.zeros((batch, d), dtype),
+        ffn_shift=jnp.zeros((batch, d), dtype),
+    )
+
+
+def rwkv6_decode(params, cfg: ModelConfig, x: jnp.ndarray, state: RWKV6State):
+    """One-token decode for a full RWKV6 block (time-mix + channel-mix).
+
+    x: (B,1,D) post-norm input to time-mix; returns (tm_out, cm_fn, new_state)
+    pieces handled by the caller model (which owns the residual adds/norms).
+    """
+    B, _, D = x.shape
+    C = cfg.ssm_head_dim
+    H = D // C
+    x_prev = state.shift[:, None, :]
+    r, k, v, g, logw = _rwkv_proj(params, cfg, x, x_prev)
+    r = r.reshape(B, H, C).astype(jnp.float32)
+    k = k.reshape(B, H, C).astype(jnp.float32)
+    v = v.reshape(B, H, C).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(B, H, C))
+    u = params["u"]
+    kv = jnp.einsum("bhc,bhd->bhcd", k, v)
+    out = jnp.einsum("bhc,bhcd->bhd", r, state.wkv + u[None, :, :, None] * kv)
+    wkv_new = state.wkv * w[..., None] + kv
+    out = out.reshape(B, 1, D)
+    out = layers.rms_norm(out.astype(x.dtype), params["ln_w"])
+    out = (out * g) @ params["wo"]
+    new_state = RWKV6State(wkv=wkv_new, shift=x[:, -1, :],
+                           ffn_shift=state.ffn_shift)
+    return out, new_state
+
+
+def rwkv6_channel_mix_decode(params, cfg: ModelConfig, x: jnp.ndarray,
+                             state: RWKV6State):
+    out, new_shift = rwkv6_channel_mix(params, cfg, x, state.ffn_shift)
+    return out, RWKV6State(wkv=state.wkv, shift=state.shift, ffn_shift=new_shift)

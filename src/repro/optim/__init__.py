@@ -1,0 +1,1 @@
+"""Optimizers + distributed-optimization tricks (sketched gradient compression)."""

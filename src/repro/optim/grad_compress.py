@@ -1,0 +1,140 @@
+"""Sketched gradient compression with error feedback (the paper's operator
+deployed as a distributed-optimization trick — DESIGN.md §4.2).
+
+Cross-pod data parallelism all-reduces the full gradient every step; at
+ratio r = d/k, sketching the per-bucket gradients with a *shared-seed*
+BLOCKPERM-SJLT before the inter-pod reduction cuts those collective bytes by
+r.  Error feedback (EF14/EF21 family) keeps the compression bias from
+accumulating:
+
+    e ← 0
+    each step:  g' = g + e
+                ĝ  = Sᵀ · AllReduce_pods( S g' )      # k ≪ d bytes on the wire
+                e  = g' - ĝ                            # residual fed back
+                optimizer consumes ĝ
+
+S is identical on every pod (same seed ⇒ same plan ⇒ same hash stream), so
+sketch-space vectors are addable across pods.  ĝ = SᵀS g' is an unbiased-in-
+expectation estimate with contraction factor δ ≥ 1/r; with EF the method
+converges at the full-precision rate asymptotically (Stich et al. 2018).
+
+The per-bucket transform uses the same FlashSketch kernel family as the
+RandNLA path (transpose apply = the decompressor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockperm import BlockPermPlan, make_plan
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    ratio: int = 8               # d/k compression per bucket
+    kappa: int = 4
+    s: int = 2
+    seed: int = 0x5EC7
+    min_bucket: int = 4096       # leaves smaller than this are left dense
+    impl: str = "xla"            # kernel dispatch for the sketch ops
+    n_rotations: int = 4         # rotate among R sketch draws (step % R)
+    damping: float = 0.0         # 0 => auto γ = k/(k+d)
+
+    def gamma(self, plan: BlockPermPlan) -> float:
+        """Contraction damping.  For a JL sketch E‖SᵀSx‖² ≈ (1+d/k)‖x‖², so
+        γ·SᵀS with γ = k/(k+d) makes x ↦ γSᵀSx a (k/(k+d))-contraction in
+        expectation — the condition error feedback needs to converge
+        (Stich et al. 2018).  Without damping, ‖I−SᵀS‖₂ ≈ (1+√(d/k))²−1 > 1
+        and EF *diverges* (verified in tests)."""
+        if self.damping > 0:
+            return self.damping
+        return plan.k_pad / (plan.k_pad + plan.d_pad)
+
+
+def plan_for_leaf(cfg: CompressConfig, size: int) -> Optional[BlockPermPlan]:
+    if size < cfg.min_bucket:
+        return None
+    k = max(256, size // cfg.ratio)
+    return make_plan(size, k, kappa=cfg.kappa, s=cfg.s, seed=cfg.seed)
+
+
+def init_error_state(params) -> Any:
+    """Error-feedback residuals, one per leaf (f32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _leaf_compress(cfg: CompressConfig,
+                   plan: Optional[BlockPermPlan],
+                   g: jnp.ndarray, e: jnp.ndarray,
+                   pod_axis: Optional[str],
+                   step) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compress one leaf. Returns (ĝ, new_error). Inside shard_map when
+    pod_axis is set (the psum over pods happens in sketch space).
+
+    Re-randomization: one static plan (compile-once), but the gradient is
+    circularly SHIFTED by a step-dependent offset before sketching and
+    unshifted after — S_t = S∘R_t is a fresh sketch draw each step whose
+    ranges jointly cover ℝ^d over a rotation cycle.  With a fixed S the
+    untransmitted null(S) component of the error would grow forever.
+    """
+    if plan is None:
+        gd = g.astype(jnp.float32)
+        if pod_axis is not None:
+            gd = jax.lax.pmean(gd, pod_axis)
+        return gd.astype(g.dtype), e
+    d = g.size
+    g_eff = g.astype(jnp.float32).reshape(-1) + e.reshape(-1)
+    if cfg.n_rotations > 1:
+        stride = (int(0.6180339 * d) | 1)   # golden-ratio stride: spread shifts
+        shift = (jnp.asarray(step, jnp.int32) * stride) % d
+        g_in = jnp.roll(g_eff, shift)
+    else:
+        shift = None
+        g_in = g_eff
+    col = g_in[:, None]                                    # (d, 1)
+    y = kops.sketch_apply(plan, col, cfg.impl)             # (k, 1)
+    if pod_axis is not None:
+        y = jax.lax.pmean(y, pod_axis)                     # k ≪ d on the wire
+    xhat = cfg.gamma(plan) * kops.sketch_apply_t(plan, y, cfg.impl)[:, 0]
+    if shift is not None:
+        xhat = jnp.roll(xhat, -shift)
+    g_hat = xhat
+    new_e = g_eff - g_hat
+    return g_hat.reshape(g.shape).astype(g.dtype), new_e.reshape(e.shape)
+
+
+def compress_gradients(cfg: CompressConfig, grads, err_state,
+                       pod_axis: Optional[str] = None, step=0):
+    """Apply sketch-compress + error feedback to a gradient pytree.
+
+    ``pod_axis``: shard_map axis name for the inter-pod mean (None = single
+    pod; the transform is then a pure EF-sketch round-trip, used in tests).
+    ``step``: rotates the sketch draw (step % n_rotations) — fresh randomness
+    each step is part of the EF contraction argument.
+    """
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_e = jax.tree.leaves(err_state)
+    out_g, out_e = [], []
+    for g, e in zip(leaves_g, leaves_e):
+        plan = plan_for_leaf(cfg, g.size)
+        gh, ne = _leaf_compress(cfg, plan, g, e, pod_axis, step)
+        out_g.append(gh)
+        out_e.append(ne)
+    return jax.tree.unflatten(treedef, out_g), jax.tree.unflatten(treedef, out_e)
+
+
+def wire_bytes(cfg: CompressConfig, params) -> Dict[str, float]:
+    """Collective-byte model: dense vs sketched inter-pod all-reduce."""
+    dense = 0
+    sketched = 0
+    for p in jax.tree.leaves(params):
+        dense += p.size * 4
+        plan = plan_for_leaf(cfg, p.size)
+        sketched += (plan.k if plan is not None else p.size) * 4
+    return {"dense_bytes": float(dense), "sketched_bytes": float(sketched),
+            "reduction": float(dense) / max(float(sketched), 1.0)}

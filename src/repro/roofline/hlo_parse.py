@@ -1,0 +1,502 @@
+"""Mini HLO-text cost walker.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+undercounts scan-over-layers models by a factor of n_layers (verified
+empirically — see EXPERIMENTS.md §Dry-run notes).  This walker parses the
+optimized HLO text (shapes are post-SPMD, i.e. per-device) and computes:
+
+  * flops           — dot/conv MACs×2, loop bodies × trip count
+  * hbm_bytes       — Σ over (post-fusion) ops of operand+output bytes
+                      (the standard XLA bytes-accessed model)
+  * collective wire bytes per kind, with ring-factor (n-1)/n scaling
+
+Trip counts are recovered from each while condition's compare-with-constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _parse_instr_line(line: str):
+    """Structural parse of '%name = TYPE opcode(OPERANDS), attrs'.
+
+    Handles tuple types (nested parens) and /*index=N*/ comments, which
+    defeat naive regexes on real XLA dumps.
+    Returns (name, type_str, opcode, rest) or None.
+    """
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rhs = _COMMENT_RE.sub("", s[eq + 3:]).strip()
+    if rhs.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        type_str = rhs[:end + 1]
+        rest0 = rhs[end + 1:].strip()
+    else:
+        m = re.match(r"^(\S+)", rhs)
+        if not m:
+            return None
+        type_str = m.group(1)
+        rest0 = rhs[m.end():].strip()
+    m2 = re.match(r"^([\w\-]+)\((.*)$", rest0)
+    if not m2:
+        return None
+    return name, type_str, m2.group(1), m2.group(2)
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "f32", []
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # everything after the '(' of the operand list
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]          # var -> type string
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_wire_bytes: float = 0.0
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.hbm_bytes += other.hbm_bytes * times
+        self.coll_wire_bytes += other.coll_wire_bytes * times
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * times
+
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "domain",
+    "opt-barrier", "custom-call",
+}
+
+
+def _split_operands(rest: str) -> List[str]:
+    """Operand names from 'op(%a, %b), attr=...' (first paren level)."""
+    out, depth, cur = [], 0, []
+    for ch in rest:
+        if ch == "(" :
+            depth += 1
+            cur.append(ch)
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    names = []
+    for o in out:
+        m = re.match(r"%?([\w.\-]+)", o)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        # Computation headers start at column 0 ("%name (params) -> type {"
+        # or "ENTRY %name ..."); instructions are indented.  Params may be
+        # tuple-typed (nested parens), so match only the leading name.
+        if line and not line[0].isspace():
+            header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if header and stripped.endswith("{") and "->" in stripped:
+                cur = Computation(header.group(1), [], {})
+                comps[cur.name] = cur
+                continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed is None:
+            continue
+        name, type_str, opcode, rest = parsed
+        instr = Instr(name, type_str, opcode, rest, _split_operands(rest))
+        cur.instrs.append(instr)
+        cur.shapes[name] = type_str
+    return comps
+
+
+def _attr(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=([^,]+(?:{[^}]*})?)", rest)
+    return m.group(1) if m else None
+
+
+def _called(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _group_size(rest: str, total_devices: int) -> int:
+    """Participants per replica group from 'replica_groups=[G,S]<=[...]'."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return max(1, int(m.group(2)))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", rest)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return total_devices
+
+
+def _trip_count(ins: Instr, cond: Optional[Computation]) -> float:
+    """Trip count: prefer the while op's backend_config known_trip_count,
+    fall back to the largest positive constant in the condition region."""
+    m = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"', ins.rest)
+    if m:
+        return float(m.group(1))
+    if cond is None:
+        return 1.0
+    best = 1.0
+    for cins in cond.instrs:
+        if cins.opcode == "constant":
+            cm = re.search(r"constant\((\d+)\)", cins.rest)
+            if cm:
+                best = max(best, float(cm.group(1)))
+    return best
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    _, out_dims = _shape_dims(ins.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    lhs = ins.operands[0] if ins.operands else None
+    lhs_shape = comp.shapes.get(lhs, "")
+    _, lhs_dims = _shape_dims(lhs_shape)
+    cdims = _attr(ins.rest, "lhs_contracting_dims")
+    csize = 1
+    if cdims and lhs_dims:
+        for idx in re.findall(r"\d+", cdims):
+            i = int(idx)
+            if i < len(lhs_dims):
+                csize *= lhs_dims[i]
+    return 2.0 * out_elems * csize
+
+
+def _instr_cost(comps, comp: Computation, ins: Instr, devices: int,
+                memo) -> Cost:
+    c = Cost()
+    op = ins.opcode
+    if op in _SKIP_OPS:
+        # custom-calls and control ops: charge output bytes only
+        if op == "custom-call":
+            c.hbm_bytes += _shape_bytes(ins.type_str)
+        return c
+    if op == "while":
+        body = _called(ins.rest, "body")
+        cond = _called(ins.rest, "condition")
+        trips = _trip_count(ins, comps.get(cond))
+        if body in comps:
+            c.add(computation_cost(comps, body, devices, memo), trips)
+        if cond in comps:
+            c.add(computation_cost(comps, cond, devices, memo), trips)
+        return c
+    if op in ("call", "fusion"):
+        # fusion: flops from the callee; bytes = output + refined operand
+        # charges (an operand whose only callee use is dynamic-slice/gather
+        # is charged the sliced bytes, not the full array — matches XLA's
+        # bytes-accessed model and is what makes scan-over-stacked-params
+        # costing sane).
+        callee = _called(ins.rest, "calls")
+        if callee and callee in comps:
+            inner = computation_cost(comps, callee, devices, memo,
+                                     bytes_free=True)
+            c.add(inner)
+            # output charge: a fusion whose root is an (in-place)
+            # dynamic-update-slice writes only the slice, not the whole
+            # aliased buffer — charging the full output would bill scan-ys
+            # accumulators their entire stacked size per iteration.
+            dus_update = _fusion_root_dus_update_bytes(comps[callee])
+            if dus_update is not None:
+                c.hbm_bytes += dus_update
+            else:
+                c.hbm_bytes += _shape_bytes(ins.type_str)
+            callee_comp = comps[callee]
+            param_names = [i.name for i in callee_comp.instrs
+                           if i.opcode == "parameter"]
+            for idx, o in enumerate(ins.operands):
+                full = _shape_bytes(comp.shapes.get(o, ""))
+                if idx < len(param_names):
+                    refined = _refined_param_bytes(
+                        callee_comp, param_names[idx], full)
+                    c.hbm_bytes += refined
+                else:
+                    c.hbm_bytes += full
+        else:
+            c.hbm_bytes += _shape_bytes(ins.type_str)
+            for o in ins.operands:
+                c.hbm_bytes += _shape_bytes(comp.shapes.get(o, ""))
+        return c
+    if op == "conditional":
+        for key in ("true_computation", "false_computation"):
+            callee = _called(ins.rest, key)
+            if callee and callee in comps:
+                c.add(computation_cost(comps, callee, devices, memo))
+        return c
+    if op in _COLLECTIVES:
+        nbytes = _shape_bytes(ins.type_str)
+        # Logical-dtype correction: the CPU backend upcasts every bf16 dot
+        # to f32 (no native bf16 GEMM), and SPMD collectives then ship the
+        # f32 upcasts.  A TPU build communicates the logical bf16 values.
+        # If the collective's operands are produced by convert-from-bf16
+        # (directly or as a fusion root), charge 2 bytes/elem.
+        scale = _logical_dtype_scale(comps, comp, ins)
+        nbytes *= scale
+        gsz = _group_size(ins.rest, devices)
+        ring = (gsz - 1) / gsz if gsz > 1 else 0.0
+        wire = nbytes * ring * (2.0 if op == "all-reduce" else 1.0)
+        c.coll_bytes[op] = c.coll_bytes.get(op, 0.0) + nbytes
+        c.coll_wire_bytes += wire
+        c.hbm_bytes += nbytes  # the local read/write of the buffer
+        return c
+    # generic compute op
+    if op == "dot":
+        c.flops += _dot_flops(comp, ins)
+    elif op == "convolution":
+        _, out_dims = _shape_dims(ins.type_str)
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        rhs_shape = comp.shapes.get(ins.operands[1], "") if len(ins.operands) > 1 else ""
+        _, rdims = _shape_dims(rhs_shape)
+        kernel = 1
+        for d in rdims[:-1]:
+            kernel *= d
+        c.flops += 2.0 * out_elems * kernel
+    else:
+        _, out_dims = _shape_dims(ins.type_str)
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        c.flops += float(out_elems)  # elementwise ~1 flop/elem
+    c.hbm_bytes += _op_bytes(comp, ins)
+    return c
+
+
+def _find_instr(comp: "Computation", name: str) -> Optional["Instr"]:
+    for ins in comp.instrs:
+        if ins.name == name:
+            return ins
+    return None
+
+
+def _root_is_bf16_convert(comp: "Computation", ins, depth: int = 0) -> bool:
+    if ins is None or depth > 4:
+        return False
+    if ins.opcode == "convert":
+        src = ins.operands[0] if ins.operands else None
+        return src is not None and "bf16" in comp.shapes.get(src, "")
+    if ins.opcode in ("bitcast", "copy", "transpose", "reshape"):
+        src = ins.operands[0] if ins.operands else None
+        return _root_is_bf16_convert(comp, _find_instr(comp, src), depth + 1)
+    return False
+
+
+def _produces_from_bf16_convert(comps, comp: "Computation", name: str,
+                                depth: int = 0) -> bool:
+    producer = _find_instr(comp, name)
+    if producer is None or depth > 3:
+        return False
+    if producer.opcode == "convert":
+        src = producer.operands[0] if producer.operands else None
+        return src is not None and "bf16" in comp.shapes.get(src, "")
+    if producer.opcode in ("bitcast", "copy", "transpose", "reshape"):
+        return _produces_from_bf16_convert(
+            comps, comp, producer.operands[0], depth + 1)
+    if producer.opcode == "fusion":
+        callee = _called(producer.rest, "calls")
+        if callee in comps and comps[callee].instrs:
+            return _root_is_bf16_convert(comps[callee],
+                                         comps[callee].instrs[-1])
+    return False
+
+
+def _logical_dtype_scale(comps, comp: "Computation", ins: "Instr") -> float:
+    """Fraction of the collective's f32 bytes that are logically bf16."""
+    total = 0.0
+    saved = 0.0
+    for o in ins.operands:
+        ty = comp.shapes.get(o, "")
+        ob = _shape_bytes(ty)
+        total += ob
+        if ob > 0 and "f32" in ty and _produces_from_bf16_convert(comps, comp, o):
+            saved += ob / 2.0
+    if total <= 0:
+        return 1.0
+    return max(0.5, (total - saved) / total)
+
+
+def _fusion_root_dus_update_bytes(callee: "Computation") -> Optional[float]:
+    """If a fusion's root is a dynamic-update-slice (possibly via bitcast /
+    copy), return the write charge for the UPDATE (2× its bytes: the slice
+    is read-modified-written); else None."""
+    if not callee.instrs:
+        return None
+    ins = callee.instrs[-1]
+    depth = 0
+    while ins is not None and depth < 4:
+        if ins.opcode == "dynamic-update-slice":
+            if len(ins.operands) > 1:
+                return 2.0 * _shape_bytes(callee.shapes.get(ins.operands[1], ""))
+            return None
+        if ins.opcode in ("bitcast", "copy", "convert", "reshape"):
+            src = ins.operands[0] if ins.operands else None
+            ins = _find_instr(callee, src) if src else None
+            depth += 1
+            continue
+        return None
+    return None
+
+
+def _refined_param_bytes(callee: "Computation", param_name: str,
+                         full_bytes: float) -> float:
+    """Bytes actually read from a fusion operand: if every callee use of the
+    parameter is a dynamic-slice / gather / slice, charge those outputs."""
+    sliced = 0.0
+    for ins in callee.instrs:
+        if param_name in ins.operands:
+            if ins.opcode in ("dynamic-slice", "gather", "slice"):
+                if ins.operands and ins.operands[0] == param_name:
+                    sliced += _shape_bytes(ins.type_str)
+                else:       # parameter used as index operand: negligible
+                    sliced += _shape_bytes(callee.shapes.get(param_name, ""))
+            elif ins.opcode == "dynamic-update-slice":
+                # in-place update: charge the update size, not the buffer
+                if len(ins.operands) > 1:
+                    sliced += _shape_bytes(callee.shapes.get(ins.operands[1], ""))
+            else:
+                return full_bytes
+    return min(sliced, full_bytes) if sliced else 0.0
+
+
+def _op_bytes(comp: "Computation", ins: "Instr") -> float:
+    """XLA-flavoured bytes-accessed model for a single (unfused) op."""
+    op = ins.opcode
+    out_b = _shape_bytes(ins.type_str)
+
+    def operand_b(i):
+        if i < len(ins.operands):
+            return _shape_bytes(comp.shapes.get(ins.operands[i], ""))
+        return 0.0
+
+    if op in ("dynamic-slice", "slice"):
+        return 2.0 * out_b
+    if op == "dynamic-update-slice":
+        return 2.0 * operand_b(1)
+    if op == "gather":
+        return 2.0 * out_b + operand_b(1)
+    if op == "scatter":
+        return 2.0 * operand_b(2) + operand_b(1)
+    if op in ("broadcast", "iota", "constant"):
+        return out_b
+    total = out_b
+    for i in range(len(ins.operands)):
+        total += operand_b(i)
+    return total
+
+
+def computation_cost(comps, name: str, devices: int, memo,
+                     bytes_free: bool = False) -> Cost:
+    key = (name, bytes_free)
+    if key in memo:
+        return memo[key]
+    comp = comps[name]
+    total = Cost()
+    for ins in comp.instrs:
+        ic = _instr_cost(comps, comp, ins, devices, memo)
+        if bytes_free:
+            # inside a fusion: intermediates don't touch HBM
+            ic = Cost(flops=ic.flops, hbm_bytes=0.0,
+                      coll_bytes=ic.coll_bytes,
+                      coll_wire_bytes=ic.coll_wire_bytes)
+        total.add(ic)
+    memo[key] = total
+    return total
+
+
+def entry_cost(text: str, devices: int) -> Cost:
+    comps = parse_hlo(text)
+    # entry is the computation containing ROOT at top level; heuristically the
+    # one named 'main...' or the last one defined.
+    entry = None
+    for name in comps:
+        if name.startswith("main"):
+            entry = name
+    if entry is None:
+        entry = list(comps)[-1]
+    memo: Dict = {}
+    return computation_cost(comps, entry, devices, memo)

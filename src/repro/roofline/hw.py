@@ -1,0 +1,10 @@
+"""TPU v5e hardware constants (assignment §ROOFLINE ANALYSIS)."""
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link
+HBM_PER_CHIP = 16 * 2**30       # 16 GiB
+
+# v5e 2D torus: 4 ICI links per chip usable; conservative single-link model
+# per the assignment formula (collective_bytes / (chips × link_bw)).
+ICI_LINKS = 1

@@ -1,0 +1,1 @@
+"""Sharding: activation constraints + parameter partition rules."""

@@ -1,0 +1,1 @@
+"""Training substrate: step builders, trainer loop, checkpointing, fault tolerance."""

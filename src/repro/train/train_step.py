@@ -1,0 +1,160 @@
+"""Train / serve step builders with full sharding wiring.
+
+``build_train_step`` returns (step_fn, state_specs...) ready for
+``jax.jit(..., in_shardings=..., out_shardings=..., donate_argnums=...)``
+under a mesh context.  Used by both the real trainer and the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import mesh as mesh_lib
+from repro.models.factory import (
+    build_model, decode_token_specs, train_batch_specs,
+)
+from repro.optim import adamw
+from repro.optim import grad_compress as gc
+from repro.sharding import partition as pt
+
+
+def sharding_ctx_for(mesh, cfg: ModelConfig) -> pt.ShardingContext:
+    batch_axes = mesh_lib.batch_axes_of(mesh)
+    data_size = 1
+    for a in batch_axes:
+        data_size *= mesh.shape[a]
+    return pt.ShardingContext(
+        batch_axes=batch_axes,
+        model_axis="model",
+        zero3=cfg.zero3,
+        model_size=mesh.shape.get("model", 1),
+        data_size=data_size,
+    )
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                     compress: Optional[gc.CompressConfig] = None):
+    """Returns (train_step, model).  train_step(params, opt, err, batch) ->
+    (params, opt, err, metrics).  ``err`` is the EF state (None-free pytree
+    of zeros when compression is off — keeps one signature)."""
+    model = build_model(cfg)
+
+    def train_step(params, opt_state, err_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        if compress is not None:
+            grads, err_state = gc.compress_gradients(
+                compress, grads, err_state, step=opt_state["step"])
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, err_state, metrics
+
+    return train_step, model
+
+
+def train_state_specs(cfg: ModelConfig, mesh, model,
+                      compress: Optional[gc.CompressConfig] = None):
+    """Abstract (ShapeDtypeStruct) state + PartitionSpec trees, no allocation."""
+    ctx = sharding_ctx_for(mesh, cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = pt.param_pspecs(params_shape, ctx)
+    opt_shape = jax.eval_shape(
+        functools.partial(adamw.init_state,
+                          cfg=adamw.AdamWConfig(state_dtype=cfg.optstate_dtype)),
+        params_shape)
+    opt_specs = {
+        "m": pspecs, "v": pspecs,
+        "step": jax.sharding.PartitionSpec(),
+    }
+    if compress is not None:
+        err_shape = jax.eval_shape(gc.init_error_state, params_shape)
+        err_specs = pspecs
+    else:
+        err_shape, err_specs = None, None
+    return ctx, params_shape, pspecs, opt_shape, opt_specs, err_shape, err_specs
+
+
+# ---------------------------------------------------------------------------
+# serving (decode)
+# ---------------------------------------------------------------------------
+
+def build_serve_step(cfg: ModelConfig):
+    """serve_step(params, state, tokens, pos) -> (logits, new_state)."""
+    model = build_model(cfg)
+
+    def serve_step(params, state, tokens, pos):
+        logits, new_state = model.decode_step(params, state, tokens, pos)
+        return logits, new_state
+
+    return serve_step, model
+
+
+def decode_state_specs(cfg: ModelConfig, mesh, model, shape: ShapeConfig):
+    """Abstract decode state (KV caches / SSM states) + specs."""
+    ctx = sharding_ctx_for(mesh, cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = pt.param_pspecs(params_shape, ctx)
+    B = shape.global_batch
+    extra = {}
+    if cfg.family == "encdec":
+        extra["encoder_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        extra["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.image_tokens, cfg.d_model), jnp.float32)
+    state_shape = jax.eval_shape(
+        lambda p, e: model.init_decode_state(p, B, shape.seq_len, e),
+        params_shape, extra)
+    state_specs = decode_state_pspecs(cfg, ctx, state_shape, mesh)
+    return ctx, params_shape, pspecs, state_shape, state_specs, extra
+
+
+def _divides(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def decode_state_pspecs(cfg: ModelConfig, ctx: pt.ShardingContext,
+                        state_shape, mesh):
+    """Shard decode caches: batch over data axes when divisible, else
+    sequence over model (sequence-parallel KV for long_500k / batch=1)."""
+    P = jax.sharding.PartitionSpec
+    model_size = mesh.shape["model"]
+    data_size = 1
+    for a in ctx.batch_axes:
+        data_size *= mesh.shape[a]
+
+    def spec_for(leaf):
+        shp = leaf.shape
+        nd = len(shp)
+        if nd >= 4:
+            # (..., B, H, S, hd) KV-style or (..., B, H, P, N) state-style
+            b_dim = nd - 4
+            spec = [None] * nd
+            if _divides(shp[b_dim], data_size):
+                spec[b_dim] = ctx.batch_axes
+            # try model axis on heads, else on seq (sequence-parallel cache)
+            if _divides(shp[b_dim + 1], model_size):
+                spec[b_dim + 1] = "model"
+            elif _divides(shp[b_dim + 2], model_size):
+                spec[b_dim + 2] = "model"
+            return P(*spec)
+        if nd >= 2:
+            spec = [None] * nd
+            b_dim = nd - 2
+            if _divides(shp[b_dim], data_size):
+                spec[b_dim] = ctx.batch_axes
+            if _divides(shp[b_dim + 1], model_size):
+                spec[b_dim + 1] = "model"
+            return P(*spec)
+        return P()
+
+    return jax.tree.map(spec_for, state_shape)

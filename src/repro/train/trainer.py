@@ -1,0 +1,98 @@
+"""Trainer: the glue loop — data pipeline → sharded train step → metrics,
+with periodic async checkpointing, restart-from-latest, and optional sketched
+gradient compression.  Runs identically on 1 CPU device (smoke/examples) and
+on a production mesh (launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import pipeline as dp
+from repro.optim import adamw
+from repro.optim import grad_compress as gc
+from repro.train import checkpoint as ckpt
+from repro.train import train_step as ts
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                 tcfg: TrainerConfig,
+                 data_cfg: dp.DataConfig,
+                 compress: Optional[gc.CompressConfig] = None,
+                 log_fn: Callable[[str], None] = print):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.data_cfg = data_cfg
+        self.compress = compress
+        self.log = log_fn
+        self.step_fn, self.model = ts.build_train_step(cfg, opt_cfg, compress)
+        self._jitted = jax.jit(self.step_fn)
+        self.async_ckpt = ckpt.AsyncCheckpointer()
+
+    # ------------------------------------------------------------------
+    def init_state(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(self.tcfg.seed)
+        params = self.model.init(key)
+        opt_state = adamw.init_state(params, self.opt_cfg)
+        err = gc.init_error_state(params) if self.compress else {}
+        return params, opt_state, err
+
+    def maybe_restore(self, params, opt_state, err):
+        d = self.tcfg.ckpt_dir
+        if not d:
+            return params, opt_state, err, 0
+        step = ckpt.latest_step(d)
+        if step is None:
+            return params, opt_state, err, 0
+        tree = {"params": params, "opt": opt_state, "err": err}
+        restored, step = ckpt.restore(d, step, tree)
+        self.log(f"[trainer] restored checkpoint step={step}")
+        return restored["params"], restored["opt"], restored["err"], step
+
+    # ------------------------------------------------------------------
+    def fit(self, start_key=None) -> Dict[str, Any]:
+        params, opt_state, err = self.init_state(start_key)
+        params, opt_state, err, start = self.maybe_restore(params, opt_state, err)
+        losses = []
+        t0 = time.time()
+        for step in range(start, self.tcfg.total_steps):
+            batch_np = dp.make_batch(self.data_cfg, step)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt_state, err, metrics = self._jitted(
+                params, opt_state, err, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % self.tcfg.log_every == 0:
+                self.log(f"[trainer] step={step} loss={loss:.4f} "
+                         f"gnorm={float(metrics['grad_norm']):.3f} "
+                         f"lr={float(metrics['lr']):.2e}")
+            if self.tcfg.ckpt_dir and (step + 1) % self.tcfg.ckpt_every == 0:
+                self.async_ckpt.save_async(
+                    self.tcfg.ckpt_dir, step + 1,
+                    {"params": params, "opt": opt_state, "err": err})
+                ckpt.prune_old(self.tcfg.ckpt_dir, self.tcfg.ckpt_keep)
+        self.async_ckpt.wait()
+        return {
+            "losses": losses,
+            "final_params": params,
+            "steps": self.tcfg.total_steps - start,
+            "wall_s": time.time() - t0,
+        }

@@ -1,0 +1,71 @@
+"""GraSS attribution pipeline + LDS metric tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.attribution import lds as L
+from repro.attribution import mlp as M
+from repro.attribution.grass import (
+    GrassPipeline, GrassPipelineConfig, run_grass_lds, sparsify_mask,
+)
+
+
+def test_spearman_known_values():
+    assert L.spearman([1, 2, 3, 4], [1, 2, 3, 4]) == pytest.approx(1.0)
+    assert L.spearman([1, 2, 3, 4], [4, 3, 2, 1]) == pytest.approx(-1.0)
+    # monotone nonlinear -> still 1.0 (rank correlation)
+    x = np.array([1.0, 2.0, 3.0, 10.0])
+    assert L.spearman(x, x ** 3) == pytest.approx(1.0)
+    # ties handled
+    v = L.spearman([1, 1, 2, 3], [1, 2, 3, 4])
+    assert 0.8 < v <= 1.0
+
+
+def test_subsets_and_lds_shapes():
+    masks = L.sample_subsets(100, 7, 0.5, seed=1)
+    assert masks.shape == (7, 100)
+    assert np.all(masks.sum(1) == 50)
+    # perfect additive model => LDS = 1
+    rng = np.random.default_rng(0)
+    tau = rng.normal(size=(3, 100))
+    true = (tau @ masks.T.astype(float)).T      # (m, n_test)
+    assert L.lds_score(true, tau, masks) == pytest.approx(1.0)
+
+
+def test_sparsify_mask_deterministic():
+    m1 = sparsify_mask(1000, 100, seed=3)
+    m2 = sparsify_mask(1000, 100, seed=3)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    assert len(set(np.asarray(m1).tolist())) == 100
+    assert np.all(np.diff(np.asarray(m1)) > 0)
+
+
+def test_mlp_trains():
+    cfg = M.MLPConfig(d_in=64, hidden=(32,), steps=100)
+    x, y = M.make_synthetic_mnist(256, 64, seed=0)
+    p = M.train_mlp(cfg, x, y)
+    acc = float(jnp.mean(jnp.argmax(M.mlp_apply(p, x), -1) == y))
+    assert acc > 0.8
+
+
+def test_feature_cache_shapes_and_determinism():
+    cfg = M.MLPConfig(d_in=64, hidden=(16,), steps=20)
+    x, y = M.make_synthetic_mnist(32, 64, seed=0)
+    p = M.train_mlp(cfg, x, y)
+    pc = GrassPipelineConfig(sparse_dim=256, sketch_dim=64)
+    pipe = GrassPipeline(pc, p)
+    c1, _ = pipe.build_cache(x, y)
+    c2, _ = pipe.build_cache(x, y)
+    assert c1.shape == (32, pipe.sketch.k)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+
+
+@pytest.mark.slow
+def test_grass_lds_end_to_end_positive():
+    mcfg = M.MLPConfig(d_in=128, hidden=(32, 32), steps=80)
+    res = run_grass_lds(
+        GrassPipelineConfig(sparse_dim=1024, sketch_dim=256,
+                            sketch_family="blockperm"),
+        mcfg, n_train=256, n_test=24, m_subsets=24)
+    assert res["lds"] > 0.1, res

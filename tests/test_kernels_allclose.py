@@ -1,0 +1,86 @@
+"""Pallas (interpret=True) vs pure-jnp oracle: shape/dtype/param sweeps.
+
+Per the assignment: for each Pallas kernel, sweep shapes/dtypes and
+assert_allclose against the ref.py oracle.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.blockperm import make_plan
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+SWEEP = [
+    # (d, k, kappa, s, block_rows, n)
+    (256, 64, 1, 1, 8, 16),
+    (256, 64, 2, 2, 8, 33),
+    (300, 96, 3, 2, 16, 37),
+    (512, 128, 4, 4, 32, 64),
+    (1000, 256, 4, 2, 32, 128),
+    (128, 128, 2, 1, 16, 1),
+    (2048, 512, 8, 2, 64, 20),
+]
+
+
+@pytest.mark.parametrize("d,k,kappa,s,br,n", SWEEP)
+def test_flashsketch_fwd(d, k, kappa, s, br, n, rng):
+    plan = make_plan(d=d, k=k, kappa=kappa, s=s, block_rows=br, seed=d + n)
+    A = jnp.asarray(rng.normal(size=(d, n)), jnp.float32)
+    Y_ref = kref.flashsketch_ref(plan, A)
+    Y_pl = ops.sketch_apply(plan, A, impl="pallas", tn=16)
+    np.testing.assert_allclose(np.asarray(Y_pl), np.asarray(Y_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("d,k,kappa,s,br,n", SWEEP[:5])
+def test_flashsketch_transpose(d, k, kappa, s, br, n, rng):
+    plan = make_plan(d=d, k=k, kappa=kappa, s=s, block_rows=br, seed=d + n)
+    Y = jnp.asarray(rng.normal(size=(plan.k, n)), jnp.float32)
+    X_ref = kref.flashsketch_transpose_ref(plan, Y)
+    X_pl = ops.sketch_apply_t(plan, Y, impl="pallas", tn=16)
+    np.testing.assert_allclose(np.asarray(X_pl), np.asarray(X_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("d,k,kappa,s,br,n", SWEEP[:5])
+def test_blockrow(d, k, kappa, s, br, n, rng):
+    plan = make_plan(d=d, k=k, kappa=kappa, s=s, block_rows=br, seed=d + n)
+    A = jnp.asarray(rng.normal(size=(d, n)), jnp.float32)
+    Y_ref = kref.blockrow_ref(plan, A)
+    Y_pl = ops.blockrow_apply(plan, A, impl="pallas", tn=16)
+    np.testing.assert_allclose(np.asarray(Y_pl), np.asarray(Y_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype, rng):
+    """Kernel accepts bf16 inputs (accumulates f32, returns f32)."""
+    plan = make_plan(d=256, k=64, kappa=2, s=2, block_rows=8, seed=1)
+    A = jnp.asarray(rng.normal(size=(256, 24)), dtype)
+    Y_ref = kref.flashsketch_ref(plan, A)
+    Y_pl = ops.sketch_apply(plan, A, impl="pallas", tn=8)
+    atol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(Y_pl, np.float32),
+                               np.asarray(Y_ref, np.float32), atol=atol, rtol=1e-2)
+
+
+@pytest.mark.parametrize("tn", [8, 16, 64, 128])
+def test_tile_width_invariance(tn, rng):
+    """Output must be independent of the column-tile width T_n."""
+    plan = make_plan(d=256, k=64, kappa=2, s=2, block_rows=8, seed=1)
+    A = jnp.asarray(rng.normal(size=(256, 24)), jnp.float32)
+    Y_ref = kref.flashsketch_ref(plan, A)
+    Y_pl = ops.sketch_apply(plan, A, impl="pallas", tn=tn)
+    np.testing.assert_allclose(np.asarray(Y_pl), np.asarray(Y_ref), atol=1e-4)
+
+
+def test_vector_api(rng):
+    plan = make_plan(d=100, k=32, kappa=2, s=2, block_rows=8, seed=6)
+    x = jnp.asarray(rng.normal(size=(4, 3, 100)), jnp.float32)
+    y = ops.sketch_vectors(plan, x, impl="xla")
+    assert y.shape == (4, 3, plan.k)
+    # consistency with matrix API
+    Y = ops.sketch_apply(plan, x.reshape(-1, 100).T, "xla")
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, plan.k).T),
+                               np.asarray(Y), atol=1e-5)

@@ -1,0 +1,94 @@
+"""Roofline HLO walker: parser unit tests + end-to-end on a tiny compile."""
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_parse, hw
+
+
+SAMPLE = """\
+HloModule jit_f, entry_computation_layout={(f32[128,128])->f32[]}
+
+%body.1 (arg: (s32[], f32[128,128], f32[10,128,128])) -> (s32[], f32[128,128], f32[10,128,128]) {
+  %arg = (s32[], f32[128,128]{1,0}, f32[10,128,128]{2,1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%arg), index=0
+  %g1 = f32[128,128]{1,0} get-tuple-element(%arg), index=1
+  %g2 = f32[10,128,128]{2,1,0} get-tuple-element(%arg), index=2
+  %ds = f32[1,128,128]{2,1,0} dynamic-slice(%g2, %g0), dynamic_slice_sizes={1,128,128}
+  %w = f32[128,128]{1,0} bitcast(%ds)
+  %dot.0 = f32[128,128]{1,0} dot(%g1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c1 = s32[] constant(1)
+  %next = s32[] add(%g0, %c1)
+  ROOT %tup = (s32[], f32[128,128]{1,0}, f32[10,128,128]{2,1,0}) tuple(%next, %dot.0, %g2)
+}
+
+%cond.1 (arg.1: (s32[], f32[128,128], f32[10,128,128])) -> pred[] {
+  %arg.1 = (s32[], f32[128,128]{1,0}, f32[10,128,128]{2,1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg.1), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main.1 (p0: f32[128,128], p1: f32[10,128,128]) -> f32[128,128] {
+  %p0 = f32[128,128]{1,0} parameter(0)
+  %p1 = f32[10,128,128]{2,1,0} parameter(1)
+  %c0 = s32[] constant(0)
+  %t = (s32[], f32[128,128]{1,0}, f32[10,128,128]{2,1,0}) tuple(%c0, %p0, %p1)
+  %while.1 = (s32[], f32[128,128]{1,0}, f32[10,128,128]{2,1,0}) while(%t), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %ar = f32[128,128]{1,0} all-reduce(%p0), replica_groups=[4,2]<=[8], to_apply=%cond.1
+  ROOT %out = f32[128,128]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert hlo_parse._shape_bytes("f32[128,128]{1,0}") == 128 * 128 * 4
+    assert hlo_parse._shape_bytes("bf16[4,2]") == 16
+    assert hlo_parse._shape_bytes("(f32[2], s32[3])") == 8 + 12
+    assert hlo_parse._shape_bytes("pred[]") == 1
+
+
+def test_instr_line_parse():
+    line = ("  %while.83 = (s32[], bf16[16,256,2048]{2,1,0}, "
+            "/*index=5*/f32[1,2]{1,0}) while(%tuple), condition=%c, body=%b")
+    name, type_str, opcode, rest = hlo_parse._parse_instr_line(line)
+    assert name == "while.83"
+    assert opcode == "while"
+    assert "condition=%c" in rest
+
+
+def test_walker_counts_loop_flops_and_collectives():
+    cost = hlo_parse.entry_cost(SAMPLE, devices=8)
+    expected_dot = 2 * 128 * 128 * 128 * 10          # 10 loop trips
+    assert cost.flops == pytest.approx(expected_dot, rel=0.02)
+    # all-reduce: 128*128*4 bytes, ring factor (2-1)/2, x2 for reduce+bcast
+    assert cost.coll_bytes["all-reduce"] == 128 * 128 * 4
+    assert cost.coll_wire_bytes == pytest.approx(128 * 128 * 4 * 0.5 * 2)
+    # dynamic-slice of the stacked weights charges slice bytes, not the stack
+    assert cost.hbm_bytes < 10 * (128 * 128 * 4) * 12
+
+
+def test_refined_fusion_param_bytes():
+    comps = hlo_parse.parse_hlo(SAMPLE)
+    body = comps["body.1"]
+    full = 10 * 128 * 128 * 4
+    refined = hlo_parse._refined_param_bytes(body, "g2", full)
+    # g2 is used by dynamic-slice AND passed through tuple -> full charge
+    assert refined == full
+
+
+def test_end_to_end_tiny_compile():
+    import jax
+    import jax.numpy as jnp
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(x, ws).compile()
+    cost = hlo_parse.entry_cost(compiled.as_text(), 1)
+    expected = 2 * 64 * 64 * 64 * 7
+    assert expected * 0.9 < cost.flops < expected * 1.3

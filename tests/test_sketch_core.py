@@ -1,0 +1,116 @@
+"""BLOCKPERM-SJLT structural invariants + ref-vs-dense-materialization checks."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import wiring
+from repro.core.blockperm import (
+    BlockPermPlan, dense_block, make_plan, materialize_sketch_matrix,
+)
+from repro.kernels import ref as kref
+
+
+PLANS = [
+    dict(d=256, k=64, kappa=1, s=1, seed=0),
+    dict(d=256, k=64, kappa=2, s=2, seed=1),
+    dict(d=300, k=96, kappa=3, s=2, seed=7, block_rows=16),
+    dict(d=512, k=128, kappa=4, s=4, seed=3, block_rows=32),
+    dict(d=128, k=128, kappa=2, s=1, seed=5, block_rows=16),
+]
+
+
+@pytest.mark.parametrize("kw", PLANS)
+def test_structure(kw):
+    plan = make_plan(**kw)
+    S = np.asarray(materialize_sketch_matrix(plan))
+    # (i) exactly κs nonzeros per column, magnitude 1/√(κs)
+    nnz = (np.abs(S) > 0).sum(axis=0)
+    assert np.all(nnz == plan.nnz_per_col), "every column must have κs nonzeros"
+    mags = np.abs(S[np.abs(S) > 0])
+    np.testing.assert_allclose(mags, plan.scale, rtol=1e-6)
+    # (ii) block bipartite graph is κ-regular and edge-disjoint
+    pi = wiring.wiring_table(plan.seed, plan.M, plan.kappa)
+    assert wiring.check_edge_disjoint(pi) and wiring.check_biregular(pi)
+    # (iii) block sparsity mask matches the wiring
+    for g in range(plan.M):
+        row_blk = S[g * plan.Br:(g + 1) * plan.Br]
+        live = set()
+        for h in range(plan.M):
+            if np.any(row_blk[:, h * plan.Bc:(h + 1) * plan.Bc] != 0):
+                live.add(h)
+        assert live <= set(int(x) for x in pi[:, g]), \
+            "nonzero blocks outside the sampled neighborhood"
+
+
+@pytest.mark.parametrize("kw", PLANS)
+@pytest.mark.parametrize("n", [1, 17, 64])
+def test_ref_matches_dense(kw, n, rng):
+    plan = make_plan(**kw)
+    A = jnp.asarray(rng.normal(size=(plan.d, n)), jnp.float32)
+    S = materialize_sketch_matrix(plan)
+    Y_dense = S @ kref.pad_input(plan, A)
+    Y_ref = kref.flashsketch_ref(plan, A)
+    np.testing.assert_allclose(np.asarray(Y_ref), np.asarray(Y_dense),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("kw", PLANS[:3])
+def test_transpose_matches_dense(kw, rng):
+    plan = make_plan(**kw)
+    Y = jnp.asarray(rng.normal(size=(plan.k, 9)), jnp.float32)
+    S = materialize_sketch_matrix(plan)
+    X_dense = (S.T @ Y)[: plan.d]
+    X_ref = kref.flashsketch_transpose_ref(plan, Y)
+    np.testing.assert_allclose(np.asarray(X_ref), np.asarray(X_dense),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_kappa1_is_block_diagonal():
+    """κ=1 must reduce to the localized (block-diagonal-per-permutation) SJLT."""
+    plan = make_plan(d=256, k=128, kappa=1, s=2, seed=11, block_rows=16)
+    S = np.asarray(materialize_sketch_matrix(plan))
+    pi = wiring.wiring_table(plan.seed, plan.M, plan.kappa)
+    for g in range(plan.M):
+        row_blk = S[g * plan.Br:(g + 1) * plan.Br]
+        for h in range(plan.M):
+            blk = row_blk[:, h * plan.Bc:(h + 1) * plan.Bc]
+            if h == int(pi[0, g]):
+                assert np.any(blk != 0)
+            else:
+                assert np.all(blk == 0)
+
+
+def test_row_partition_one_nnz_per_chunk():
+    """Row-partitioned SJLT: each column has exactly one nonzero per chunk."""
+    plan = make_plan(d=128, k=64, kappa=2, s=4, seed=2, block_rows=16)
+    phi = np.asarray(dense_block(plan, 0, plan.neighbors(0)[0]))
+    chunk = plan.chunk
+    for i in range(plan.s):
+        sub = phi[i * chunk:(i + 1) * chunk]
+        assert np.all((np.abs(sub) > 0).sum(axis=0) == 1)
+
+
+def test_unbiased_norm_preservation(rng):
+    """E‖Sx‖² = ‖x‖² over sketch draws (paper Lemma A.1 energy identity)."""
+    x = jnp.asarray(rng.normal(size=(512, 1)), jnp.float32)
+    vals = []
+    for seed in range(60):
+        p = make_plan(d=512, k=256, kappa=4, s=2, seed=seed)
+        y = kref.flashsketch_ref(p, x)
+        vals.append(float(jnp.sum(y ** 2) / jnp.sum(x ** 2)))
+    mean = np.mean(vals)
+    se = np.std(vals) / np.sqrt(len(vals))
+    assert abs(mean - 1.0) < 4 * se + 0.02, (mean, se)
+
+
+def test_grad_is_transpose(rng):
+    plan = make_plan(d=96, k=48, kappa=2, s=2, seed=4, block_rows=8)
+    from repro.kernels import ops
+    A = jnp.asarray(rng.normal(size=(plan.d, 5)), jnp.float32)
+    W = jnp.asarray(rng.normal(size=(plan.k, 5)), jnp.float32)
+    f = lambda a: jnp.vdot(ops.sketch_apply(plan, a, "xla"), W)
+    g = jax.grad(f)(A)
+    S = materialize_sketch_matrix(plan)
+    expected = (S.T @ W)[: plan.d]
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expected), atol=1e-4)

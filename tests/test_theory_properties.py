@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) for the paper's theory claims.
+
+Invariants checked:
+  * Lemma A.1 energy identity: Σ_g ‖x_N(g)‖² = κ‖x‖².
+  * Lemma A.9 sandwich: μ_blk/κ ≤ μ_nbr ≤ μ_blk.
+  * Prop A.11 smoothing trend: μ_nbr decreases (stochastically) with κ.
+  * OSE behaviour: distortion shrinks ~1/√k (Thm 6.2 scaling).
+  * Hash determinism + uniformity.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coherence, hashing, wiring
+from repro.core.blockperm import make_plan
+from repro.kernels import ref as kref
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    logM=st.integers(1, 8),
+    kappa=st.integers(1, 8),
+)
+@settings(max_examples=40, deadline=None)
+def test_energy_identity(seed, logM, kappa):
+    M = 1 << logM
+    kappa = min(kappa, M)
+    pi = wiring.wiring_table(seed, M, kappa)
+    rng = np.random.default_rng(seed % 1000)
+    x = rng.normal(size=(M, 4))           # one 4-dim block per block index
+    total = sum(
+        np.sum(x[pi[ell, g]] ** 2) for g in range(M) for ell in range(kappa)
+    )
+    np.testing.assert_allclose(total, kappa * np.sum(x ** 2), rtol=1e-9)
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    logM=st.integers(2, 5),
+    kappa=st.integers(1, 8),
+    r=st.integers(1, 6),
+)
+@settings(max_examples=30, deadline=None)
+def test_coherence_sandwich(seed, logM, kappa, r):
+    M = 1 << logM
+    kappa = min(kappa, M)
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(8 * M, r))
+    U, _ = np.linalg.qr(X)
+    pi = wiring.wiring_table(seed, M, kappa)
+    mu_blk = coherence.block_coherence(U, M)
+    mu_nbr = coherence.neighborhood_coherence(U, pi)
+    assert mu_nbr <= mu_blk * (1 + 1e-9)
+    assert mu_nbr >= mu_blk / kappa * (1 - 1e-9)
+    assert mu_nbr >= 1.0 - 1e-9  # coherence is always ≥ 1 for orthonormal U
+
+
+def test_smoothing_with_kappa():
+    """Prop A.11: for a coherent subspace, μ_nbr falls as κ grows."""
+    M = 64
+    rng = np.random.default_rng(0)
+    # spiky subspace: energy concentrated in one block => μ_blk ≈ M
+    U = np.zeros((M * 8, 4))
+    U[:8, :] = np.linalg.qr(rng.normal(size=(8, 4)))[0]
+    mu_blk = coherence.block_coherence(U, M)
+    assert mu_blk > M / 2
+    mus = []
+    for kappa in [1, 2, 4, 8, 16]:
+        vals = [
+            coherence.neighborhood_coherence(U, wiring.wiring_table(s, M, kappa))
+            for s in range(5)
+        ]
+        mus.append(np.mean(vals))
+    # monotone decrease (allow tiny noise) and ~1/κ scaling overall
+    assert mus[-1] < mus[0] / 4
+    for a, b in zip(mus, mus[1:]):
+        assert b <= a * 1.05
+
+
+@pytest.mark.parametrize("k", [128, 512])
+def test_ose_error_scaling(k, rng):
+    """Thm 6.2: distortion ε ~ √(μ_nbr·t/k) — quadrupling k halves error."""
+    d, r = 2048, 8
+    U, _ = np.linalg.qr(rng.normal(size=(d, r)))
+    errs = []
+    for seed in range(4):
+        plan = make_plan(d=d, k=k, kappa=4, s=2, seed=seed)
+        SU = kref.flashsketch_ref(plan, jnp.asarray(U, jnp.float32))
+        errs.append(coherence.ose_spectral_error(U, np.asarray(SU)))
+    mean = np.mean(errs)
+    bound = 3.0 * np.sqrt(r / k) + 0.1
+    assert mean < bound, (mean, bound)
+
+
+def test_ose_error_improves_with_k(rng):
+    d, r = 2048, 8
+    U, _ = np.linalg.qr(rng.normal(size=(d, r)))
+    def mean_err(k):
+        out = []
+        for seed in range(4):
+            plan = make_plan(d=d, k=k, kappa=4, s=2, seed=seed)
+            SU = kref.flashsketch_ref(plan, jnp.asarray(U, jnp.float32))
+            out.append(coherence.ose_spectral_error(U, np.asarray(SU)))
+        return np.mean(out)
+    assert mean_err(1024) < mean_err(128)
+
+
+@given(words=st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=6))
+@settings(max_examples=50, deadline=None)
+def test_hash_python_matches_jnp(words):
+    """The pure-python hash path (used for static tables) must equal jnp."""
+    py = int(hashing.hash_words(*[np.uint32(w) for w in words]))
+    jn = int(np.asarray(hashing.hash_words(
+        jnp.uint32(words[0]), *[np.uint32(w) for w in words[1:]]
+    )))
+    assert py == jn
+
+
+def test_hash_uniformity():
+    """Destination rows should be ~uniform within each chunk."""
+    plan = make_plan(d=4096, k=1024, kappa=2, s=2, block_rows=128, seed=0)
+    from repro.core.blockperm import block_rows_signs
+    u = jnp.arange(plan.Bc, dtype=jnp.int32)
+    rows, signs = block_rows_signs(plan, 0, 1, u, 0)
+    rows = np.asarray(rows)
+    counts = np.bincount(rows, minlength=plan.chunk)
+    # chi-square-ish sanity: no row gets > 5x expected mass
+    expected = plan.Bc / plan.chunk
+    assert counts.max() < 5 * expected + 5
+    s = np.asarray(signs)
+    assert 0.3 < np.mean(s > 0) < 0.7
+
+
+def test_smoothing_bound_formula():
+    v = coherence.smoothing_bound(mu_blk=16.0, kappa=16, M=64, r=4)
+    assert v > 1.0
+    v2 = coherence.smoothing_bound(mu_blk=16.0, kappa=64, M=64, r=4)
+    assert v2 < v

@@ -1,0 +1,259 @@
+"""Training substrate: optimizer, data pipeline, checkpoint, trainer loop,
+grad compression (error feedback), fault-tolerance policies."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import smoke_config
+from repro.configs.registry import ARCHS
+from repro.data import pipeline as dp
+from repro.optim import adamw
+from repro.optim import grad_compress as gc
+from repro.train import checkpoint as ckpt
+from repro.train import fault_tolerance as ft
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------------- data
+
+def test_data_determinism_and_sharding():
+    cfg = dp.DataConfig(vocab_size=97, global_batch=8, seq_len=16, seed=3)
+    b1 = dp.make_batch(cfg, step=5)
+    b2 = dp.make_batch(cfg, step=5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = dp.make_batch(cfg, step=6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # host slices tile the global batch
+    parts = [dp.make_batch(cfg, 5, host_id=h, n_hosts=4)["tokens"]
+             for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), b1["tokens"])
+    # labels are next tokens
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_data_has_learnable_structure():
+    cfg = dp.DataConfig(vocab_size=64, global_batch=16, seq_len=64, seed=0)
+    b = dp.make_batch(cfg, 0)
+    perm = dp._bigram_next_state(cfg)
+    frac = np.mean(perm[b["tokens"]] == b["labels"])
+    assert frac > 0.7   # alpha=0.9 bigram transitions dominate
+
+
+def test_prefetcher():
+    cfg = dp.DataConfig(vocab_size=97, global_batch=4, seq_len=8)
+    pf = dp.Prefetcher(cfg, start_step=2)
+    step, batch = next(pf)
+    assert step == 2
+    np.testing.assert_array_equal(batch["tokens"],
+                                  dp.make_batch(cfg, 2)["tokens"])
+    pf.close()
+
+
+# ----------------------------------------------------------------- optimizer
+
+def test_adamw_reduces_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            total_steps=100, clip_norm=0.0)
+    params = {"w": jnp.ones((4, 4)) * 3.0}
+    state = adamw.init_state(params, cfg)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 0.5
+
+
+def test_adamw_bf16_states():
+    cfg = adamw.AdamWConfig(state_dtype="bfloat16")
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    state = adamw.init_state(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((8,), jnp.bfloat16)}
+    p2, s2, m = adamw.apply_updates(params, g, state, cfg)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+# ---------------------------------------------------------------- compression
+
+def test_grad_compress_error_feedback_reduces_bias():
+    """EF: averaged-over-steps compressed grads converge to the true grad."""
+    cfg = gc.CompressConfig(ratio=8, min_bucket=64, kappa=4, s=2)
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.normal(size=(4096,)), jnp.float32)}
+    err = gc.init_error_state(g_true)
+    acc = jnp.zeros_like(g_true["w"])
+    T = 32
+    for t in range(T):
+        g_hat, err = gc.compress_gradients(cfg, g_true, err, step=t)
+        acc = acc + g_hat["w"]
+    mean_rel = float(jnp.linalg.norm(acc / T - g_true["w"])
+                     / jnp.linalg.norm(g_true["w"]))
+    # single-shot error for comparison
+    g1, _ = gc.compress_gradients(cfg, g_true, gc.init_error_state(g_true))
+    one_rel = float(jnp.linalg.norm(g1["w"] - g_true["w"])
+                    / jnp.linalg.norm(g_true["w"]))
+    assert mean_rel < one_rel * 0.5, (mean_rel, one_rel)
+    # error-feedback state stays bounded (contraction; no divergence).
+    # EF theory: ‖e‖ ≲ ‖g‖/δ with δ = γ·coverage ≈ k/(k+d) — for ratio 8
+    # that allows ~(1/0.11)≈9× with slow transients; 30× is the sanity rail.
+    assert float(jnp.linalg.norm(err["w"])) < \
+        30 * float(jnp.linalg.norm(g_true["w"]))
+
+
+def test_grad_compress_ef_diverges_without_damping():
+    """Negative control: γ=1 (no damping) + fixed S is NOT contractive."""
+    cfg = gc.CompressConfig(ratio=8, min_bucket=64, damping=1.0,
+                            n_rotations=1)
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.normal(size=(4096,)), jnp.float32)}
+    err = gc.init_error_state(g_true)
+    for t in range(12):
+        _, err = gc.compress_gradients(cfg, g_true, err, step=t)
+    assert float(jnp.linalg.norm(err["w"])) > \
+        100 * float(jnp.linalg.norm(g_true["w"]))
+
+
+def test_grad_compress_small_leaves_passthrough():
+    cfg = gc.CompressConfig(ratio=8, min_bucket=1024)
+    g = {"small": jnp.ones((10,)), "norm": jnp.ones((3,))}
+    err = gc.init_error_state(g)
+    g2, _ = gc.compress_gradients(cfg, g, err)
+    np.testing.assert_allclose(np.asarray(g2["small"]), 1.0)
+
+
+def test_wire_bytes_reduction():
+    cfg = gc.CompressConfig(ratio=8, min_bucket=1024)
+    params = {"a": jnp.zeros((1 << 16,)), "b": jnp.zeros((64,))}
+    wb = gc.wire_bytes(cfg, params)
+    assert wb["reduction"] > 4.0
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 100, tree)
+    assert ckpt.latest_step(d) == 100
+    restored, step = ckpt.restore(d, 100, tree)
+    assert step == 100
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == np.dtype("bfloat16") or \
+        str(restored["b"]["c"].dtype) == "bfloat16"
+
+
+def test_checkpoint_async_and_prune(tmp_path):
+    d = str(tmp_path / "ck")
+    ac = ckpt.AsyncCheckpointer()
+    tree = {"w": jnp.zeros((8, 8))}
+    for s in (10, 20, 30, 40):
+        ac.save_async(d, s, tree)
+    ac.wait()
+    ckpt.prune_old(d, keep=2)
+    assert ckpt.latest_step(d) == 40
+    steps = sorted(int(x.split("_")[1]) for x in os.listdir(d))
+    assert len(steps) == 2
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"w": jnp.zeros((4,))}
+    ckpt.save(d, 1, tree)
+    # a stale .tmp dir from a crashed writer must not be visible
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))
+    assert ckpt.latest_step(d) == 1
+
+
+# ---------------------------------------------------------------- trainer
+
+def test_trainer_loss_decreases_and_restarts(tmp_path):
+    cfg = smoke_config(ARCHS["qwen3-0.6b"])
+    data_cfg = dp.DataConfig(vocab_size=cfg.vocab_size, global_batch=4,
+                             seq_len=32, seed=0)
+    opt = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=40,
+                            weight_decay=0.0)
+    tcfg = TrainerConfig(total_steps=30, ckpt_every=10,
+                         ckpt_dir=str(tmp_path / "ck"), log_every=1000)
+    tr = Trainer(cfg, opt, tcfg, data_cfg, log_fn=lambda s: None)
+    out = tr.fit()
+    first = np.mean(out["losses"][:5])
+    last = np.mean(out["losses"][-5:])
+    assert last < first - 0.2, (first, last)
+    # restart: resumes from latest checkpoint, runs only remaining steps
+    tcfg2 = TrainerConfig(total_steps=35, ckpt_every=10,
+                          ckpt_dir=str(tmp_path / "ck"), log_every=1000)
+    tr2 = Trainer(cfg, opt, tcfg2, data_cfg, log_fn=lambda s: None)
+    out2 = tr2.fit()
+    assert out2["steps"] == 5
+
+
+def test_trainer_with_compression_trains(tmp_path):
+    cfg = smoke_config(ARCHS["internlm2-1.8b"])
+    data_cfg = dp.DataConfig(vocab_size=cfg.vocab_size, global_batch=4,
+                             seq_len=32, seed=0)
+    opt = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=40,
+                            weight_decay=0.0)
+    comp = gc.CompressConfig(ratio=4, min_bucket=4096)
+    tcfg = TrainerConfig(total_steps=25, ckpt_every=1000, log_every=1000)
+    tr = Trainer(cfg, opt, tcfg, data_cfg, compress=comp,
+                 log_fn=lambda s: None)
+    out = tr.fit()
+    assert np.mean(out["losses"][-5:]) < np.mean(out["losses"][:5]) - 0.1
+
+
+# ------------------------------------------------------------ fault tolerance
+
+def test_heartbeat_and_straggler():
+    t = [0.0]
+    clock = lambda: t[0]
+    hb = ft.HeartbeatMonitor(["h0", "h1", "h2"], timeout_s=10, clock=clock)
+    t[0] = 5.0
+    hb.beat("h0")
+    hb.beat("h1")
+    t[0] = 12.0
+    assert hb.dead_hosts() == ["h2"]
+    sd = ft.StragglerDetector(patience=2, k_sigma=1.5)
+    for _ in range(5):
+        for h in ("h0", "h1", "h2", "h3"):
+            sd.record(h, 1.0)
+        sd.record("h4", 10.0)
+        sd.stragglers()
+    assert "h4" in sd.stragglers()
+
+
+def test_elastic_planner_shrinks_data_axis():
+    pl = ft.ElasticPlanner(model_parallel=16, chips_per_host=4,
+                           global_batch=256)
+    full = pl.plan(alive_hosts=64)       # 256 chips
+    assert full.data == 16 and full.model == 16
+    degraded = pl.plan(alive_hosts=33)   # 132 chips -> data 8
+    assert degraded.data == 8
+    assert degraded.chips <= 33 * 4
+
+
+def test_supervisor_survives_failures(tmp_path):
+    calls = {"n": 0}
+    saved = {"step": 0}
+
+    def run_segment(plan, start):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("simulated node loss")
+        for s in range(start, min(start + 10, 30)):
+            saved["step"] = s + 1
+        return saved["step"]
+
+    pl = ft.ElasticPlanner(model_parallel=2, chips_per_host=2, global_batch=8)
+    hb = ft.HeartbeatMonitor(["h0", "h1"], timeout_s=1e9)
+    sup = ft.TrainSupervisor(pl, hb, restore_latest=lambda: saved["step"],
+                             run_segment=run_segment)
+    rep = sup.run(total_steps=30)
+    assert rep.steps_done == 30
+    assert rep.restarts == 1

@@ -1,0 +1,49 @@
+"""Wiring invariants: full-cycle affine maps, edge-disjointness, bi-regularity."""
+import numpy as np
+import pytest
+
+from repro.core import wiring
+
+
+@pytest.mark.parametrize("M", [2, 4, 8, 16, 64, 256, 1024])
+@pytest.mark.parametrize("seed", [0, 1, 7, 123])
+def test_full_cycle(M, seed):
+    a, b = wiring.derive_affine_params(seed, M)
+    x = 0
+    seen = set()
+    for _ in range(M):
+        x = (a * x + b) % M
+        seen.add(x)
+    assert len(seen) == M, "affine map must be a single M-cycle"
+
+
+@pytest.mark.parametrize("M,kappa", [(4, 2), (8, 4), (16, 8), (64, 16), (256, 4)])
+@pytest.mark.parametrize("seed", [0, 3, 42])
+def test_edge_disjoint_and_biregular(M, kappa, seed):
+    pi = wiring.wiring_table(seed, M, kappa)
+    assert pi.shape == (kappa, M)
+    assert wiring.check_edge_disjoint(pi)
+    assert wiring.check_biregular(pi)
+    # every row is a permutation
+    for ell in range(kappa):
+        assert len(set(pi[ell].tolist())) == M
+
+
+def test_neighbor_fused_matches_iterated():
+    M, seed = 64, 5
+    a, b = wiring.derive_affine_params(seed, M)
+    for g in [0, 1, 17, 63]:
+        for ell in range(1, 9):
+            assert wiring.neighbor(g, ell, a, b, M) == \
+                wiring.neighbor_fused(g, ell, a, b, M)
+
+
+def test_wiring_jnp_matches_numpy():
+    pi_np = wiring.wiring_table(9, 32, 5)
+    pi_j = np.asarray(wiring.wiring_jnp(9, 32, 5))
+    np.testing.assert_array_equal(pi_np, pi_j)
+
+
+def test_non_pow2_rejected():
+    with pytest.raises(ValueError):
+        wiring.derive_affine_params(0, 12)
