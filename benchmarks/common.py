@@ -122,6 +122,9 @@ def default_families(seed: int = 0):
         ("srht", {}),
         ("blockperm", {"kappa": 4, "s": 2}),
         ("blockperm", {"kappa": 2, "s": 2}),
+        # mixed-precision entry is its own family so Table-1 aggregation
+        # (ours == "blockperm") never compares bf16-ours vs fp32 baselines
+        ("blockperm_bf16", {"kappa": 4, "s": 2}),
         ("localized", {"s": 2}),
         ("blockrow", {"kappa": 4, "s": 2}),
     ]

@@ -28,6 +28,51 @@ def _next_pow2(x: int) -> int:
     return 1 << max(0, (x - 1).bit_length())
 
 
+# VMEM working-set budget for the v2 fused kernel (out of ~16 MB/core),
+# shared with kernels.tune — the planner sizes blocks against it, the tuner
+# sizes tiles against it.
+VMEM_BUDGET_BYTES = 12 * 2**20
+
+# Smallest column-tile width the tuner/planner will consider; the planner's
+# fit loop and kernels.tune's sweeps must agree on it.
+MIN_TILE_N = 8
+
+# The kernel variants (single source; tune/sketch_model/benchmarks reuse it).
+SKETCH_VARIANTS = ("fwd", "transpose", "blockrow")
+
+
+def fused_variant_bytes(kappa: int, Br: int, Bc: int, tn: int,
+                        itemsize: int = 4, variant: str = "fwd") -> int:
+    """v2 VMEM footprint of one kernel variant: stacked Φ scratch +
+    double-buffered pipelined input blocks + output tile.  Must track the
+    scratch/pipeline layout in kernels/flashsketch.py."""
+    phi = kappa * Br * Bc * itemsize
+    if variant == "transpose":
+        ins = 2 * kappa * Br * tn * itemsize
+        out = Bc * tn * 4
+    else:                                   # fwd / blockrow
+        ins = 2 * kappa * Bc * tn * itemsize
+        out = Br * tn * 4
+    return phi + ins + out
+
+
+def fused_working_set_bytes(kappa: int, Br: int, Bc: int, tn: int,
+                            itemsize: int = 4) -> int:
+    """Worst case of ``fused_variant_bytes`` over all kernel variants."""
+    return max(
+        fused_variant_bytes(kappa, Br, Bc, tn, itemsize, v)
+        for v in ("fwd", "transpose")
+    )
+
+
+def _aligned_bc(d: int, M: int) -> int:
+    """Input block width for M blocks, lane-aligned (TPU lane = 128)."""
+    Bc = max(1, math.ceil(d / M))
+    if Bc > 128:
+        Bc = ((Bc + 127) // 128) * 128
+    return Bc
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockPermPlan:
     """Static description of one BLOCKPERM-SJLT draw.
@@ -52,10 +97,22 @@ class BlockPermPlan:
     seed: int
     a: int                 # wiring LCG multiplier
     b: int                 # wiring LCG offset
+    dtype: str = "float32"  # streaming dtype: "float32" or "bfloat16"
+                            # (accumulation is always fp32; bf16 halves the
+                            # HBM stream of A, justified by Jeendgar et al.)
 
     @property
     def nnz_per_col(self) -> int:
         return self.kappa * self.s
+
+    @property
+    def stream_dtype(self):
+        """jnp dtype the input is streamed in (accumulate is always fp32)."""
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def stream_itemsize(self) -> int:
+        return 2 if self.dtype == "bfloat16" else 4
 
     @property
     def scale(self) -> float:
@@ -76,8 +133,21 @@ class BlockPermPlan:
         return (
             f"BlockPermPlan(d={self.d}->pad{self.d_pad}, k={self.k}->pad{self.k_pad}, "
             f"M={self.M}, Br={self.Br}, Bc={self.Bc}, kappa={self.kappa}, s={self.s}, "
-            f"nnz/col={self.nnz_per_col}, seed={self.seed})"
+            f"nnz/col={self.nnz_per_col}, dtype={self.dtype}, seed={self.seed})"
         )
+
+    def with_dtype(self, dtype: str) -> "BlockPermPlan":
+        """Same sketch draw, different streaming precision."""
+        _check_dtype(dtype)
+        return dataclasses.replace(self, dtype=dtype)
+
+
+_VALID_DTYPES = ("float32", "bfloat16")
+
+
+def _check_dtype(dtype: str) -> None:
+    if dtype not in _VALID_DTYPES:
+        raise ValueError(f"dtype must be one of {_VALID_DTYPES}, got {dtype!r}")
 
 
 def make_plan(
@@ -89,6 +159,7 @@ def make_plan(
     seed: int = 0,
     block_rows: Optional[int] = None,
     max_block_rows: int = 256,
+    dtype: str = "float32",
 ) -> BlockPermPlan:
     """Choose a hardware-aligned block grid for (d, k) and freeze the plan.
 
@@ -101,6 +172,7 @@ def make_plan(
         raise ValueError("d and k must be positive")
     if kappa < 1 or s < 1:
         raise ValueError("kappa and s must be >= 1")
+    _check_dtype(dtype)
 
     if block_rows is not None:
         Br = _next_pow2(block_rows)
@@ -115,16 +187,24 @@ def make_plan(
     if Br % s != 0:
         # s must divide Br for the row partition; round s down to a divisor.
         raise ValueError(f"s={s} must divide Br={Br} (both powers of two ok)")
-    Bc = max(1, math.ceil(d / M))
-    # Lane-align Bc when the block is big enough to care (TPU lane = 128).
-    if Bc > 128:
-        Bc = ((Bc + 127) // 128) * 128
+    Bc = _aligned_bc(d, M)
+    # Keep the fused v2 working set (stacked Φ ∝ κ·Br·Bc plus pipelined
+    # blocks ∝ Bc, see kernels/flashsketch) resident in VMEM by trading Br
+    # for M: halving Br doubles M and halves Bc, shrinking both terms while
+    # k_pad = M·Br is unchanged.  Only when the caller did not pin block_rows.
+    if block_rows is None:
+        while (fused_working_set_bytes(kappa, Br, Bc, tn=MIN_TILE_N)
+               > VMEM_BUDGET_BYTES
+               and Br // 2 >= max(_next_pow2(s), 1)):
+            Br //= 2
+            M *= 2
+            Bc = _aligned_bc(d, M)
     k_pad = M * Br
     d_pad = M * Bc
     a, b = wiring.derive_affine_params(seed, M)
     return BlockPermPlan(
         d=d, k=k_pad, k_req=k, d_pad=d_pad, k_pad=k_pad, M=M, Br=Br, Bc=Bc,
-        kappa=kappa, s=s, seed=seed, a=a, b=b,
+        kappa=kappa, s=s, seed=seed, a=a, b=b, dtype=dtype,
     )
 
 

@@ -29,6 +29,7 @@ from repro.core import hashing
 from repro.core.blockperm import BlockPermPlan, make_plan
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.roofline import sketch_model
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,17 +181,33 @@ class SRHTSketch(SketchBase):
 
 
 class BlockPermSketch(SketchBase):
-    """BLOCKPERM-SJLT applied via FlashSketch (Pallas on TPU, XLA on CPU)."""
+    """BLOCKPERM-SJLT applied via FlashSketch (Pallas on TPU, XLA on CPU).
+
+    ``kernel_version`` selects the cost-model generation ("v2" fused
+    single-write vs "v1" κ-revisiting) and the Pallas impl dispatched on
+    TPU; ``dtype`` selects the streaming precision ("bfloat16" halves the
+    dominant HBM term, accumulation stays fp32).
+    """
 
     name = "blockperm"
 
     def __init__(self, d, k, kappa: int = 4, s: int = 2, seed: int = 0,
                  impl: str = "auto", plan: Optional[BlockPermPlan] = None,
-                 block_rows: Optional[int] = None):
+                 block_rows: Optional[int] = None, dtype: Optional[str] = None,
+                 kernel_version: str = "v2"):
         super().__init__(d, k, seed)
-        self.plan = plan or make_plan(d, k, kappa=kappa, s=s, seed=seed,
-                                      block_rows=block_rows)
+        if plan is not None:
+            # an explicit plan (e.g. from tune.autotune_plan) wins on the
+            # structural knobs, but dtype is re-appliable precision
+            self.plan = plan.with_dtype(dtype) if dtype is not None else plan
+        else:
+            self.plan = make_plan(d, k, kappa=kappa, s=s, seed=seed,
+                                  block_rows=block_rows,
+                                  dtype=dtype or "float32")
         self.k = self.plan.k        # effective (padded-up) sketch dim
+        self.kernel_version = kernel_version
+        if impl == "auto" and kernel_version == "v1":
+            impl = "pallas_v1" if jax.default_backend() == "tpu" else "xla"
         self.impl = impl
 
     def apply(self, A):
@@ -200,20 +217,39 @@ class BlockPermSketch(SketchBase):
         return kops.sketch_apply_t(self.plan, Y, self.impl)
 
     def cost_model(self, n: int) -> CostModel:
-        p = self.plan
+        kc = sketch_model.kernel_cost(self.plan, n,
+                                      version=self.kernel_version)
         return CostModel(
             # MXU one-hot contraction FLOPs (TPU adaptation); the *useful*
             # scatter flops are 2·κs·d·n — both are below the memory term.
-            flops=2.0 * p.kappa * p.Br * p.d_pad * n,
-            # A streamed κ times (each input block feeds κ output blocks),
-            # Y written once. No atomics, no S materialization.
-            hbm_bytes=4.0 * (p.kappa * p.d_pad * n + p.k_pad * n),
+            flops=kc.mxu_flops,
+            # A streamed κ times (each input block feeds κ output blocks);
+            # v2 writes Y once (bf16-aware), v1 charges the κ revisits.
+            # No atomics, no S materialization.
+            hbm_bytes=kc.hbm_bytes,
             materializes_S=False,
         )
 
     @property
     def name_full(self) -> str:
-        return f"blockperm(k={self.plan.kappa},s={self.plan.s})"
+        p = self.plan
+        tag = f"blockperm(k={p.kappa},s={p.s}"
+        if p.dtype != "float32":
+            tag += f",{p.dtype}"
+        return tag + ")"
+
+
+class BlockPermBf16Sketch(BlockPermSketch):
+    """bf16-streaming BLOCKPERM-SJLT, registered as its own family so
+    mixed-precision rows stay labeled in benchmark tables and are never
+    silently selected as the fp32 "ours" in Table-1 aggregation."""
+
+    name = "blockperm_bf16"
+
+    def __init__(self, d, k, kappa: int = 4, s: int = 2, seed: int = 0,
+                 impl: str = "auto", **kw):
+        super().__init__(d, k, kappa=kappa, s=s, seed=seed, impl=impl,
+                         dtype="bfloat16", **kw)
 
 
 class LocalizedSketch(BlockPermSketch):
@@ -231,9 +267,9 @@ class BlockRowSketch(SketchBase):
     name = "blockrow"
 
     def __init__(self, d, k, kappa: int = 4, s: int = 2, seed: int = 0,
-                 impl: str = "auto"):
+                 impl: str = "auto", dtype: str = "float32"):
         super().__init__(d, k, seed)
-        self.plan = make_plan(d, k, kappa=kappa, s=s, seed=seed)
+        self.plan = make_plan(d, k, kappa=kappa, s=s, seed=seed, dtype=dtype)
         self.k = self.plan.k
         self.impl = impl
 
@@ -247,7 +283,11 @@ class BlockRowSketch(SketchBase):
             # Key App.-C advantage: A is read ~once (κ blocks per output
             # block, but block choices are iid => coverage ~ (1-1/e) of A
             # per column tile; we charge the worst case of one full read).
-            hbm_bytes=4.0 * (p.d_pad * n + p.k_pad * n),
+            # NOTE: this is the *family-level* model (the paper's native
+            # GPU gather, for Table-1 comparability across families);
+            # roofline.sketch_model charges the TPU kernel as launched
+            # (κ pipelined views) — see kernel_cost(variant="blockrow").
+            hbm_bytes=float(p.stream_itemsize) * p.d_pad * n + 4.0 * p.k_pad * n,
             materializes_S=False,
         )
 
@@ -258,6 +298,7 @@ SKETCH_FAMILIES = {
     "sjlt": SJLTSketch,
     "srht": SRHTSketch,
     "blockperm": BlockPermSketch,
+    "blockperm_bf16": BlockPermBf16Sketch,
     "localized": LocalizedSketch,
     "blockrow": BlockRowSketch,
 }

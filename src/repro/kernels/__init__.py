@@ -1,6 +1,11 @@
 """Pallas TPU kernels for the paper's compute hot-spot (the sketch apply).
 
-  flashsketch.py — FLASHSKETCH fwd/transpose + FLASHBLOCKROW pallas_call
-  ops.py         — jit'd public wrappers with padding + custom_vjp
+  flashsketch.py — FLASHSKETCH v2 fused-κ single-write kernels (fwd/
+                   transpose/blockrow) with VMEM Φ caching and a
+                   mixed-precision streaming path; v1 grid-reduction
+                   kernels kept as the equivalence/benchmark baseline
+  ops.py         — jit'd public wrappers with padding, impl dispatch,
+                   dtype knob + custom_vjp
+  tune.py        — tile autotuner (tn and M/Br sweeps, shape-keyed cache)
   ref.py         — pure-jnp oracles (ground truth for tests)
 """

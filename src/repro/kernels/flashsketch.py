@@ -1,17 +1,33 @@
-"""FLASHSKETCH Pallas/TPU kernel (paper §5, adapted per DESIGN.md §2).
+"""FLASHSKETCH v2 Pallas/TPU kernel suite (paper §5, adapted per DESIGN.md §2).
 
-Grid ``(n/T_n, M, κ)`` with the κ axis as an arbitrary-order reduction:
-program ``(j, g, ℓ)`` owns output tile ``Y[g·B_r:(g+1)B_r, j·T_n:(j+1)T_n]``
-(resident in VMEM across the κ revisits — the TPU analogue of the paper's
-"one thread-block owns one output tile, single global write") and streams
-input block ``h = π_{ℓ+1}(g)`` through VMEM.  The block wiring is evaluated
-*inside the BlockSpec index_map* from precomputed affine constants — the
-paper's App. D on-the-fly generation, moved to the scalar core.
+v2 (default) — fused-κ single-write formulation:
 
-The intra-block scatter-add is re-expressed as an on-the-fly one-hot
-contraction on the MXU: Φ_{g,h} is built in VMEM from ``broadcasted_iota`` +
-counter-based hashes (bit-identical to ``ref.py``) and contracted with the
-input tile.  No atomics exist or are needed.
+  * Grid ``(M, n/T_n)`` with the column-tile axis ``j`` **innermost**.
+    Program ``(g, j)`` owns output tile ``Y[g·B_r:(g+1)B_r, j·T_n:(j+1)T_n]``
+    and receives all κ gathered input blocks ``A[π_ℓ(g)·B_c:…, j·T_n:…]``
+    for ℓ = 1..κ via κ block-pipelined views of the same operand.
+  * The κ reduction happens **inside** the kernel: the stacked tile
+    ``[Φ_{g,π₁(g)} | … | Φ_{g,π_κ(g)}] ∈ (B_r, κ·B_c)`` is contracted
+    against the stacked input ``(κ·B_c, T_n)`` in a single MXU dot,
+    producing exactly **one** output write per tile — no κ grid revisits,
+    no output read-modify-writes.
+  * The stacked Φ lives in VMEM scratch and depends only on ``g`` — it is
+    rebuilt only at ``j == 0`` and reused across all n/T_n column tiles,
+    amortizing the s hash passes (VPU work) by a factor of n/T_n.
+  * Mixed precision: with ``plan.dtype == "bfloat16"`` the input streams
+    from HBM in bf16 and Φ is held in bf16 (entries ±1/0 are exact), while
+    the MXU accumulates in fp32 (``preferred_element_type``).  This halves
+    the dominant HBM term in the paper's d ≫ k regime.
+
+v1 — the original output-revisiting grid reduction, grid ``(n/T_n, M, κ)``
+with κ as an arbitrary-order reduction axis and Φ rebuilt for every
+``(j, g, ℓ)`` program.  Kept as a reference oracle for equivalence tests
+and as the perf baseline for ``benchmarks/kernel_bench.py``.
+
+Both paths build Φ from counter-based hashes bit-identical to ``ref.py`` /
+``core.blockperm.dense_block``; the block wiring arrives as a scalar-prefetch
+table so BlockSpec index_maps do data-dependent block gathering (the
+Pallas-idiomatic realization of the paper's App. D on-the-fly wiring).
 """
 from __future__ import annotations
 
@@ -58,6 +74,32 @@ def _inverse_wiring_tables(plan: BlockPermPlan) -> Tuple[np.ndarray, np.ndarray]
     return Ai, Bi
 
 
+def _fwd_neighbor_table(plan: BlockPermPlan) -> np.ndarray:
+    """(κ, M) table: h = π_{ℓ+1}(g)."""
+    A_tab, B_tab = _wiring_tables(plan)
+    g = np.arange(plan.M, dtype=np.int64)
+    return np.stack(
+        [(A_tab[l] * g + B_tab[l]) % plan.M for l in range(plan.kappa)]
+    ).astype(np.int32)
+
+
+def _inv_neighbor_table(plan: BlockPermPlan) -> np.ndarray:
+    """(κ, M) table: g = π_{ℓ+1}^{-1}(h)."""
+    Ai, Bi = _inverse_wiring_tables(plan)
+    h = np.arange(plan.M, dtype=np.int64)
+    return np.stack(
+        [(int(Ai[l]) * h + int(Bi[l])) % plan.M for l in range(plan.kappa)]
+    ).astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _blockrow_table(plan: BlockPermPlan) -> np.ndarray:
+    """(κ, M) iid wiring, forced to concrete numpy so the wrappers stay
+    jittable (the table depends only on the static plan)."""
+    with jax.ensure_compile_time_eval():
+        return np.asarray(kref.blockrow_wiring(plan))
+
+
 # ---------------------------------------------------------------------------
 # In-kernel Φ construction (must match ref._phi_all_blocks bit-for-bit).
 # ---------------------------------------------------------------------------
@@ -102,16 +144,225 @@ def _phi_rows_tile(plan: BlockPermPlan, g, h) -> jnp.ndarray:
     return phi
 
 
+def stacked_phi(plan: BlockPermPlan, g, neighbors, *, rows_pattern: bool = False):
+    """The fused tile [Φ_{g,h₁} | … | Φ_{g,h_κ}] ∈ (Br, κ·Bc).
+
+    Exactly the construction the v2 kernel writes into VMEM scratch at
+    ``j == 0`` (exposed for bit-exactness tests against ``dense_block``).
+    """
+    tile_fn = _phi_rows_tile if rows_pattern else _phi_tile
+    g = jnp.asarray(g, jnp.int32)
+    return jnp.concatenate(
+        [tile_fn(plan, g, jnp.asarray(h, jnp.int32)) for h in neighbors], axis=1
+    )
+
+
 # ---------------------------------------------------------------------------
-# Kernel bodies.  The (κ, M) wiring table arrives as a *scalar-prefetch*
-# operand (pltpu.PrefetchScalarGridSpec): the TPU scalar core reads it ahead
-# of the grid loop so BlockSpec index_maps can do data-dependent block
-# selection — the Pallas-idiomatic realization of the paper's on-the-fly
-# wiring (App. D).  The table itself is κ·M int32s (a few KB), generated from
-# the affine full-cycle map.
+# v2 kernel bodies: fused-κ, single output write, Φ cached across j.
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale):
+def _fused_fwd_kernel(tab_ref, *refs, plan: BlockPermPlan, scale, phi_fn):
+    a_refs = refs[: plan.kappa]
+    o_ref = refs[plan.kappa]
+    phi_ref = refs[plan.kappa + 1]          # (Br, κ·Bc) VMEM scratch
+    g = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _build_phi():
+        for ell in range(plan.kappa):
+            h = tab_ref[ell, g]
+            phi_ref[:, ell * plan.Bc:(ell + 1) * plan.Bc] = (
+                phi_fn(plan, g, h).astype(phi_ref.dtype)
+            )
+
+    stacked = jnp.concatenate(
+        [a_refs[ell][...] for ell in range(plan.kappa)], axis=0
+    )                                        # (κ·Bc, tn), streaming dtype
+    o_ref[...] = jnp.dot(
+        phi_ref[...], stacked, preferred_element_type=jnp.float32
+    ) * scale
+
+
+def _fused_transpose_kernel(tab_ref, *refs, plan: BlockPermPlan, scale):
+    y_refs = refs[: plan.kappa]
+    o_ref = refs[plan.kappa]
+    phi_ref = refs[plan.kappa + 1]          # (κ·Br, Bc) VMEM scratch
+    hb = pl.program_id(0)                   # input-block index (output of Sᵀ)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _build_phi():
+        for ell in range(plan.kappa):
+            g = tab_ref[ell, hb]            # g = π_{ℓ+1}^{-1}(hb)
+            phi_ref[ell * plan.Br:(ell + 1) * plan.Br, :] = (
+                _phi_tile(plan, g, hb).astype(phi_ref.dtype)
+            )
+
+    stacked = jnp.concatenate(
+        [y_refs[ell][...] for ell in range(plan.kappa)], axis=0
+    )                                        # (κ·Br, tn)
+    o_ref[...] = jnp.dot(
+        phi_ref[...].T, stacked, preferred_element_type=jnp.float32
+    ) * scale
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (raw; user-facing API with padding/custom_vjp in ops.py)
+# ---------------------------------------------------------------------------
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _compiler_params(interpret: bool, semantics):
+    if interpret:
+        return None
+    try:
+        return pltpu.CompilerParams(dimension_semantics=semantics)
+    except AttributeError:  # older jax spelling
+        return pltpu.TPUCompilerParams(dimension_semantics=semantics)
+
+
+def _run_v1(plan, kernel, tab, operand, in_block, out_block, out_rows, n, tn,
+            interpret):
+    grid = (n // tn, plan.M, plan.kappa)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(in_block, lambda j, g, l, tab_ref: (tab_ref[l, g], j)),
+        ],
+        out_specs=pl.BlockSpec(out_block, lambda j, g, l, tab_ref: (g, j)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((out_rows, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=_compiler_params(
+            interpret, ("parallel", "parallel", "arbitrary")
+        ),
+    )(jnp.asarray(tab), operand)
+
+
+def _run_fused(plan, kernel, tab, operand, in_block, out_block, phi_shape,
+               out_rows, n, tn, interpret):
+    """v2 launcher: grid (M, n/tn), κ pipelined views of one operand, Φ scratch.
+
+    The same operand is passed κ times — each view has its own BlockSpec whose
+    index_map picks input block ``tab[ℓ, ·]``, so the pipeline prefetches all
+    κ gathered blocks for program (g, j) without any HBM-side gather copy.
+    """
+    grid = (plan.M, n // tn)
+    cdt = operand.dtype
+
+    def _gather_map(ell):
+        return lambda g, j, tab_ref: (tab_ref[ell, g], j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(in_block, _gather_map(ell)) for ell in range(plan.kappa)
+        ],
+        out_specs=pl.BlockSpec(out_block, lambda g, j, tab_ref: (g, j)),
+        scratch_shapes=[pltpu.VMEM(phi_shape, cdt)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((out_rows, n), jnp.float32),
+        interpret=interpret,
+        # j must run sequentially per g (Φ scratch is built at j == 0);
+        # g tiles are independent and may be megacore-partitioned.
+        compiler_params=_compiler_params(interpret, ("parallel", "arbitrary")),
+    )(jnp.asarray(tab), *([operand] * plan.kappa))
+
+
+def _stream(plan: BlockPermPlan, operand: jnp.ndarray) -> jnp.ndarray:
+    """Cast the operand to the plan's streaming dtype (bf16 path)."""
+    return operand.astype(plan.stream_dtype)
+
+
+def flashsketch_pallas(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    *,
+    tn: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Y = S A via the fused v2 kernel. A must be (d_pad, n) with n % tn == 0."""
+    if interpret is None:
+        interpret = _should_interpret()
+    d_pad, n = A.shape
+    assert d_pad == plan.d_pad, (d_pad, plan.d_pad)
+    assert n % tn == 0, (n, tn)
+    kernel = functools.partial(
+        _fused_fwd_kernel, plan=plan, scale=plan.scale, phi_fn=_phi_tile
+    )
+    return _run_fused(
+        plan, kernel, _fwd_neighbor_table(plan), _stream(plan, A),
+        in_block=(plan.Bc, tn), out_block=(plan.Br, tn),
+        phi_shape=(plan.Br, plan.kappa * plan.Bc),
+        out_rows=plan.k_pad, n=n, tn=tn, interpret=interpret,
+    )
+
+
+def flashsketch_transpose_pallas(
+    plan: BlockPermPlan,
+    Y: jnp.ndarray,
+    *,
+    tn: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """X = Sᵀ Y via the fused v2 kernel. Y must be (k_pad, n) with n % tn == 0."""
+    if interpret is None:
+        interpret = _should_interpret()
+    k_pad, n = Y.shape
+    assert k_pad == plan.k_pad, (k_pad, plan.k_pad)
+    assert n % tn == 0, (n, tn)
+    kernel = functools.partial(_fused_transpose_kernel, plan=plan, scale=plan.scale)
+    return _run_fused(
+        plan, kernel, _inv_neighbor_table(plan), _stream(plan, Y),
+        in_block=(plan.Br, tn), out_block=(plan.Bc, tn),
+        phi_shape=(plan.kappa * plan.Br, plan.Bc),
+        out_rows=plan.d_pad, n=n, tn=tn, interpret=interpret,
+    )
+
+
+def blockrow_pallas(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    *,
+    tn: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """FLASHBLOCKROW forward via the fused v2 kernel. A: (d_pad, n), n % tn == 0."""
+    if interpret is None:
+        interpret = _should_interpret()
+    d_pad, n = A.shape
+    assert d_pad == plan.d_pad
+    assert n % tn == 0
+    h_np = _blockrow_table(plan)                            # (κ, M) static
+    scale = plan.scale * math.sqrt(plan.d_pad / plan.k_pad)
+    kernel = functools.partial(
+        _fused_fwd_kernel, plan=plan, scale=scale, phi_fn=_phi_rows_tile
+    )
+    return _run_fused(
+        plan, kernel, h_np, _stream(plan, A),
+        in_block=(plan.Bc, tn), out_block=(plan.Br, tn),
+        phi_shape=(plan.Br, plan.kappa * plan.Bc),
+        out_rows=plan.k_pad, n=n, tn=tn, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# v1 kernels — output-revisiting grid reduction.  Reference oracle for the
+# equivalence tests and the baseline for kernel_bench; always fp32.
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel_v1(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale):
     g = pl.program_id(1)
     ell = pl.program_id(2)
     h = tab_ref[ell, g]
@@ -130,7 +381,7 @@ def _fwd_kernel(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale):
         o_ref[...] += contrib
 
 
-def _transpose_kernel(tab_ref, y_ref, o_ref, *, plan: BlockPermPlan, scale):
+def _transpose_kernel_v1(tab_ref, y_ref, o_ref, *, plan: BlockPermPlan, scale):
     hb = pl.program_id(1)               # input block index (output of Sᵀ)
     ell = pl.program_id(2)
     g = tab_ref[ell, hb]                # g = f^{-ℓ}(hb)
@@ -149,7 +400,7 @@ def _transpose_kernel(tab_ref, y_ref, o_ref, *, plan: BlockPermPlan, scale):
         o_ref[...] += contrib
 
 
-def _blockrow_kernel(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale):
+def _blockrow_kernel_v1(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale):
     g = pl.program_id(1)
     ell = pl.program_id(2)
     h = tab_ref[ell, g]
@@ -168,123 +419,65 @@ def _blockrow_kernel(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale):
         o_ref[...] += contrib
 
 
-# ---------------------------------------------------------------------------
-# pallas_call wrappers (raw; user-facing API with padding/custom_vjp in ops.py)
-# ---------------------------------------------------------------------------
-
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _compiler_params(interpret: bool):
-    if interpret:
-        return None
-    try:
-        return pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        )
-    except AttributeError:  # older jax spelling
-        return pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        )
-
-
-def _fwd_neighbor_table(plan: BlockPermPlan) -> np.ndarray:
-    """(κ, M) table: h = π_{ℓ+1}(g)."""
-    A_tab, B_tab = _wiring_tables(plan)
-    g = np.arange(plan.M, dtype=np.int64)
-    return np.stack(
-        [(A_tab[l] * g + B_tab[l]) % plan.M for l in range(plan.kappa)]
-    ).astype(np.int32)
-
-
-def _inv_neighbor_table(plan: BlockPermPlan) -> np.ndarray:
-    """(κ, M) table: g = π_{ℓ+1}^{-1}(h)."""
-    Ai, Bi = _inverse_wiring_tables(plan)
-    h = np.arange(plan.M, dtype=np.int64)
-    return np.stack(
-        [(int(Ai[l]) * h + int(Bi[l])) % plan.M for l in range(plan.kappa)]
-    ).astype(np.int32)
-
-
-def _run(plan, kernel, tab, operand, in_block, out_block, out_rows, n, tn, interpret):
-    grid = (n // tn, plan.M, plan.kappa)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(in_block, lambda j, g, l, tab_ref: (tab_ref[l, g], j)),
-        ],
-        out_specs=pl.BlockSpec(out_block, lambda j, g, l, tab_ref: (g, j)),
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((out_rows, n), jnp.float32),
-        interpret=interpret,
-        compiler_params=_compiler_params(interpret),
-    )(jnp.asarray(tab), operand)
-
-
-def flashsketch_pallas(
+def flashsketch_pallas_v1(
     plan: BlockPermPlan,
     A: jnp.ndarray,
     *,
     tn: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Y = S A via the Pallas kernel. A must already be (d_pad, n) with n % tn == 0."""
+    """Y = S A via the v1 grid-reduction kernel (fp32 only)."""
     if interpret is None:
         interpret = _should_interpret()
     d_pad, n = A.shape
     assert d_pad == plan.d_pad, (d_pad, plan.d_pad)
     assert n % tn == 0, (n, tn)
-    kernel = functools.partial(_fwd_kernel, plan=plan, scale=plan.scale)
-    return _run(
+    kernel = functools.partial(_fwd_kernel_v1, plan=plan, scale=plan.scale)
+    return _run_v1(
         plan, kernel, _fwd_neighbor_table(plan), A,
         in_block=(plan.Bc, tn), out_block=(plan.Br, tn),
         out_rows=plan.k_pad, n=n, tn=tn, interpret=interpret,
     )
 
 
-def flashsketch_transpose_pallas(
+def flashsketch_transpose_pallas_v1(
     plan: BlockPermPlan,
     Y: jnp.ndarray,
     *,
     tn: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """X = Sᵀ Y via the Pallas kernel. Y must be (k_pad, n) with n % tn == 0."""
+    """X = Sᵀ Y via the v1 grid-reduction kernel (fp32 only)."""
     if interpret is None:
         interpret = _should_interpret()
     k_pad, n = Y.shape
     assert k_pad == plan.k_pad, (k_pad, plan.k_pad)
     assert n % tn == 0, (n, tn)
-    kernel = functools.partial(_transpose_kernel, plan=plan, scale=plan.scale)
-    return _run(
+    kernel = functools.partial(_transpose_kernel_v1, plan=plan, scale=plan.scale)
+    return _run_v1(
         plan, kernel, _inv_neighbor_table(plan), Y,
         in_block=(plan.Br, tn), out_block=(plan.Bc, tn),
         out_rows=plan.d_pad, n=n, tn=tn, interpret=interpret,
     )
 
 
-def blockrow_pallas(
+def blockrow_pallas_v1(
     plan: BlockPermPlan,
     A: jnp.ndarray,
     *,
     tn: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """FLASHBLOCKROW forward via Pallas. A must be (d_pad, n), n % tn == 0."""
+    """FLASHBLOCKROW forward via the v1 grid-reduction kernel (fp32 only)."""
     if interpret is None:
         interpret = _should_interpret()
     d_pad, n = A.shape
     assert d_pad == plan.d_pad
     assert n % tn == 0
-    h_np = np.asarray(kref.blockrow_wiring(plan))           # (κ, M) static
+    h_np = _blockrow_table(plan)                            # (κ, M) static
     scale = plan.scale * math.sqrt(plan.d_pad / plan.k_pad)
-    kernel = functools.partial(_blockrow_kernel, plan=plan, scale=scale)
-    return _run(
+    kernel = functools.partial(_blockrow_kernel_v1, plan=plan, scale=scale)
+    return _run_v1(
         plan, kernel, h_np, A,
         in_block=(plan.Bc, tn), out_block=(plan.Br, tn),
         out_rows=plan.k_pad, n=n, tn=tn, interpret=interpret,

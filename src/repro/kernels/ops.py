@@ -1,15 +1,30 @@
 """Public jit'd wrappers for the FlashSketch kernels.
 
-``sketch_apply(plan, A, impl=...)`` handles padding, impl dispatch
-(Pallas-on-TPU / interpret-on-CPU / pure-XLA einsum), and differentiation:
-the VJP of ``Y = S A`` w.r.t. ``A`` is ``Sᵀ dY`` — the transpose kernel —
+``sketch_apply(plan, A, impl=..., tn=..., dtype=...)`` handles padding, impl
+dispatch, tile selection, and differentiation:
+
+  * ``impl``: ``"pallas"`` (the fused v2 kernel, default on TPU),
+    ``"pallas_v1"`` (the original κ-grid-reduction kernel, kept as a
+    reference/benchmark baseline), or ``"xla"`` (pure-jnp oracle, default on
+    CPU). ``"auto"`` picks per backend.
+  * ``tn``: column-tile width.  ``None`` (default) defers to the autotuner
+    cache (``kernels.tune.resolve_tn``) — tuned winner if one is cached for
+    this shape class, else a VMEM-budget heuristic.  The lookup happens at
+    *trace time*: load tuned winners (``tune.load_cache``) before the first
+    jitted call for a shape, or pass ``tn`` explicitly — jit will not
+    retrace when the cache changes later.
+  * ``dtype``: streaming precision override (``"float32"``/``"bfloat16"``);
+    ``None`` uses the plan-level knob.  bf16 streams the input at half the
+    HBM traffic while accumulating in fp32 (robust per Jeendgar et al.).
+
+The VJP of ``Y = S A`` w.r.t. ``A`` is ``Sᵀ dY`` — the transpose kernel —
 so sketching composes with ``jax.grad`` (needed when the sketch sits inside
 a training graph, e.g. sketched gradient compression with error feedback).
 """
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,14 +32,53 @@ import jax.numpy as jnp
 from repro.core.blockperm import BlockPermPlan
 from repro.kernels import flashsketch as fsk
 from repro.kernels import ref as kref
+from repro.kernels import tune
 
-Impl = Literal["auto", "pallas", "xla"]
+Impl = Literal["auto", "pallas", "pallas_v1", "xla"]
+
+_PALLAS_IMPLS = ("pallas", "pallas_v1")
 
 
 def _resolve_impl(impl: Impl) -> str:
-    if impl != "auto":
-        return impl
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("xla",) + _PALLAS_IMPLS:
+        raise ValueError(
+            f"impl must be one of ('auto', 'pallas', 'pallas_v1', 'xla'), "
+            f"got {impl!r}")
+    return impl
+
+
+def _resolve_pallas(impl: str, plan: BlockPermPlan, n: int, variant: str) -> str:
+    """Downgrade v2 → v1 when the fused Φ scratch cannot fit VMEM.
+
+    The stacked Φ is (Br, κ·Bc), independent of the tile width, so huge
+    d_pad/M plans must use the revisiting kernel on real hardware.  (In
+    interpret mode there is no VMEM, but dispatch stays consistent so the
+    two backends run the same kernel for a given shape.)
+    """
+    if impl == "pallas" and not tune.fused_fits_vmem(plan, n, variant):
+        return "pallas_v1"
+    return impl
+
+
+def _resolve_plan(plan: BlockPermPlan, dtype: Optional[str]) -> BlockPermPlan:
+    if dtype is None or dtype == plan.dtype:
+        return plan
+    return plan.with_dtype(dtype)
+
+
+def _resolve_tn(tn: Optional[int], plan: BlockPermPlan, n: int, variant: str,
+                impl: str = "pallas") -> int:
+    if tn is None:
+        if impl == "pallas_v1":
+            # v1's working set is one block pair + the Φ tile — the v2
+            # VMEM heuristic would pick a degenerate tile here.
+            return tune.v1_default_tn(plan, n)
+        return tune.resolve_tn(plan, n, variant)
+    if tn < 1:
+        raise ValueError(f"tn must be >= 1, got {tn}")
+    return tn
 
 
 def _pad_cols(A: jnp.ndarray, tn: int) -> tuple[jnp.ndarray, int]:
@@ -35,68 +89,117 @@ def _pad_cols(A: jnp.ndarray, tn: int) -> tuple[jnp.ndarray, int]:
     return A, n
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3))
-def sketch_apply(plan: BlockPermPlan, A: jnp.ndarray, impl: Impl = "auto", tn: int = 128):
+def _emulate_stream(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
+    """Round through the streaming dtype so the XLA oracle sees the same
+    input precision the Pallas bf16 path streams from HBM."""
+    if plan.dtype == "float32":
+        return A
+    return A.astype(plan.stream_dtype).astype(jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3, 4))
+def sketch_apply(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    impl: Impl = "auto",
+    tn: Optional[int] = None,
+    dtype: Optional[str] = None,
+):
     """Y = S A.  A: (d, n) -> (k, n).  Differentiable in A."""
-    return _sketch_apply_impl(plan, A, impl, tn)
+    return _sketch_apply_impl(plan, A, impl, tn, dtype)
 
 
-def _sketch_apply_impl(plan, A, impl, tn):
+def _sketch_apply_impl(plan, A, impl, tn, dtype):
+    plan = _resolve_plan(plan, dtype)
     impl = _resolve_impl(impl)
     if impl == "xla":
-        return kref.flashsketch_ref(plan, A)
+        return kref.flashsketch_ref(plan, _emulate_stream(plan, A))
+    assert impl in _PALLAS_IMPLS, impl
     Ap = kref.pad_input(plan, A)
+    impl = _resolve_pallas(impl, plan, Ap.shape[1], "fwd")
+    tn = _resolve_tn(tn, plan, Ap.shape[1], "fwd", impl)
     Ap, n = _pad_cols(Ap, tn)
-    Y = fsk.flashsketch_pallas(plan, Ap, tn=tn)
+    if impl == "pallas_v1":
+        # v1 computes in fp32; keep the plan's streaming-precision contract
+        # by rounding the input exactly as the bf16 stream would.
+        Y = fsk.flashsketch_pallas_v1(plan, _emulate_stream(plan, Ap), tn=tn)
+    else:
+        Y = fsk.flashsketch_pallas(plan, Ap, tn=tn)
     return Y[: plan.k, :n]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3))
-def sketch_apply_t(plan: BlockPermPlan, Y: jnp.ndarray, impl: Impl = "auto", tn: int = 128):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3, 4))
+def sketch_apply_t(
+    plan: BlockPermPlan,
+    Y: jnp.ndarray,
+    impl: Impl = "auto",
+    tn: Optional[int] = None,
+    dtype: Optional[str] = None,
+):
     """X = Sᵀ Y.  Y: (k, n) -> (d, n).  Differentiable in Y."""
-    return _sketch_apply_t_impl(plan, Y, impl, tn)
+    return _sketch_apply_t_impl(plan, Y, impl, tn, dtype)
 
 
-def _sketch_apply_t_impl(plan, Y, impl, tn):
+def _sketch_apply_t_impl(plan, Y, impl, tn, dtype):
+    plan = _resolve_plan(plan, dtype)
     impl = _resolve_impl(impl)
     if impl == "xla":
-        return kref.flashsketch_transpose_ref(plan, Y)
+        return kref.flashsketch_transpose_ref(plan, _emulate_stream(plan, Y))
+    assert impl in _PALLAS_IMPLS, impl
     Yp = Y
     if Y.shape[0] != plan.k_pad:
         Yp = jnp.pad(Y, ((0, plan.k_pad - Y.shape[0]), (0, 0)))
+    impl = _resolve_pallas(impl, plan, Yp.shape[1], "transpose")
+    tn = _resolve_tn(tn, plan, Yp.shape[1], "transpose", impl)
     Yp, n = _pad_cols(Yp, tn)
-    X = fsk.flashsketch_transpose_pallas(plan, Yp, tn=tn)
+    if impl == "pallas_v1":
+        X = fsk.flashsketch_transpose_pallas_v1(plan, _emulate_stream(plan, Yp), tn=tn)
+    else:
+        X = fsk.flashsketch_transpose_pallas(plan, Yp, tn=tn)
     return X[: plan.d, :n]
 
 
-def _apply_fwd(plan, A, impl, tn):
-    return _sketch_apply_impl(plan, A, impl, tn), None
+def _apply_fwd(plan, A, impl, tn, dtype):
+    return _sketch_apply_impl(plan, A, impl, tn, dtype), None
 
 
-def _apply_bwd(plan, impl, tn, _res, dY):
-    return (_sketch_apply_t_impl(plan, dY, impl, tn),)
+def _apply_bwd(plan, impl, tn, dtype, _res, dY):
+    return (_sketch_apply_t_impl(plan, dY, impl, tn, dtype),)
 
 
-def _apply_t_fwd(plan, Y, impl, tn):
-    return _sketch_apply_t_impl(plan, Y, impl, tn), None
+def _apply_t_fwd(plan, Y, impl, tn, dtype):
+    return _sketch_apply_t_impl(plan, Y, impl, tn, dtype), None
 
 
-def _apply_t_bwd(plan, impl, tn, _res, dX):
-    return (_sketch_apply_impl(plan, dX, impl, tn),)
+def _apply_t_bwd(plan, impl, tn, dtype, _res, dX):
+    return (_sketch_apply_impl(plan, dX, impl, tn, dtype),)
 
 
 sketch_apply.defvjp(_apply_fwd, _apply_bwd)
 sketch_apply_t.defvjp(_apply_t_fwd, _apply_t_bwd)
 
 
-def blockrow_apply(plan: BlockPermPlan, A: jnp.ndarray, impl: Impl = "auto", tn: int = 128):
+def blockrow_apply(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    impl: Impl = "auto",
+    tn: Optional[int] = None,
+    dtype: Optional[str] = None,
+):
     """FLASHBLOCKROW forward (no VJP — appendix-C variant is eval-only)."""
+    plan = _resolve_plan(plan, dtype)
     impl = _resolve_impl(impl)
     if impl == "xla":
-        return kref.blockrow_ref(plan, A)
+        return kref.blockrow_ref(plan, _emulate_stream(plan, A))
+    assert impl in _PALLAS_IMPLS, impl
     Ap = kref.pad_input(plan, A)
+    impl = _resolve_pallas(impl, plan, Ap.shape[1], "blockrow")
+    tn = _resolve_tn(tn, plan, Ap.shape[1], "blockrow", impl)
     Ap, n = _pad_cols(Ap, tn)
-    Y = fsk.blockrow_pallas(plan, Ap, tn=tn)
+    if impl == "pallas_v1":
+        Y = fsk.blockrow_pallas_v1(plan, _emulate_stream(plan, Ap), tn=tn)
+    else:
+        Y = fsk.blockrow_pallas(plan, Ap, tn=tn)
     return Y[: plan.k, :n]
 
 

@@ -1,0 +1,309 @@
+"""Tile autotuner for the FlashSketch v2 kernels.
+
+Two layers:
+
+  * ``resolve_tn(plan, n, variant)`` — the cheap path used by ``ops``
+    dispatch whenever the caller passes ``tn=None``.  Pure python: returns
+    the cached tuned width for this shape class if one exists, else a
+    VMEM-budget heuristic.  Safe to call at trace time (no timing, no jit).
+  * ``autotune(plan, n, ...)`` / ``autotune_plan(d, k, n, ...)`` — the
+    active path: times real kernel launches over a sweep of ``tn`` (and,
+    for ``autotune_plan``, the ``M``/``B_r`` split via ``block_rows``),
+    then populates the cache so subsequent ``resolve_tn`` calls return the
+    measured winner.
+
+Cache entries are keyed by the *shape class* ``(backend, variant, d_pad,
+k_pad, M, Br, kappa, s, bucket(n), dtype)`` — ``n`` is bucketed to its next
+power of two so nearby column counts share a winner, and the backend tag
+("interpret" off-TPU) keeps interpreter timings from ever being served as
+compiled-TPU winners.  The cache is a process-global
+dict with optional JSON persistence (``save_cache``/``load_cache``) so
+benchmark runs can ship winners to serving jobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import time
+import warnings
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blockperm import (MIN_TILE_N, SKETCH_VARIANTS, BlockPermPlan,
+                                  VMEM_BUDGET_BYTES, _next_pow2,
+                                  fused_variant_bytes, make_plan)
+from repro.kernels import flashsketch as fsk
+
+VARIANTS = SKETCH_VARIANTS
+
+_MIN_TN = MIN_TILE_N
+_MAX_TN = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    tn: int
+    block_rows: Optional[int] = None   # set by autotune_plan sweeps
+    time_us: float = float("nan")
+    source: str = "heuristic"          # "heuristic" | "tuned" | "loaded"
+
+
+_CACHE: Dict[Tuple, TuneResult] = {}
+
+
+def _n_bucket(n: int) -> int:
+    return _next_pow2(max(1, n))
+
+
+def _is_better(candidate: TuneResult, incumbent: Optional[TuneResult]) -> bool:
+    """Timed results beat untimed (NaN) ones; among timed, lower wins."""
+    if incumbent is None:
+        return True
+    if math.isnan(candidate.time_us):
+        return False
+    if math.isnan(incumbent.time_us):
+        return True
+    return candidate.time_us < incumbent.time_us
+
+
+def _backend_tag(interpret: Optional[bool] = None) -> str:
+    """Interpret-mode timings say nothing about compiled-TPU behavior, so
+    winners tuned on one backend must never be served to the other."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return "interpret" if interpret else jax.default_backend()
+
+
+def cache_key(plan: BlockPermPlan, n: int, variant: str,
+              interpret: Optional[bool] = None) -> Tuple:
+    return (_backend_tag(interpret), variant, plan.d_pad, plan.k_pad, plan.M,
+            plan.Br, plan.kappa, plan.s, _n_bucket(n), plan.dtype)
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def cache_size() -> int:
+    return len(_CACHE)
+
+
+def _vmem_footprint(plan: BlockPermPlan, tn: int, variant: str) -> int:
+    return fused_variant_bytes(plan.kappa, plan.Br, plan.Bc, tn,
+                               plan.stream_itemsize, variant)
+
+
+def fused_fits_vmem(plan: BlockPermPlan, n: int, variant: str = "fwd") -> bool:
+    """Whether the v2 fused working set (stacked Φ scratch + pipelined
+    blocks) fits the VMEM budget at the smallest tile width.
+
+    The Φ scratch is (Br, κ·Bc) — independent of ``tn`` — so for very large
+    d_pad/M the fused kernel cannot fit no matter how the tuner shrinks the
+    tile; dispatch falls back to the v1 revisiting kernel in that case.
+    """
+    return _vmem_footprint(plan, _MIN_TN, variant) <= VMEM_BUDGET_BYTES
+
+
+def heuristic_tn(plan: BlockPermPlan, n: int, variant: str = "fwd") -> int:
+    """Largest power-of-two tile width that fits the VMEM budget.
+
+    Prefers ≥128 (TPU lane width) when the problem is wide enough; never
+    exceeds the (power-of-two-rounded) column count, so small problems are
+    not padded into oblivion.
+    """
+    cap = min(_MAX_TN, _n_bucket(n))
+    tn = max(_MIN_TN, cap)
+    while tn > _MIN_TN and _vmem_footprint(plan, tn, variant) > VMEM_BUDGET_BYTES:
+        tn //= 2
+    return tn
+
+
+def resolve_tn(plan: BlockPermPlan, n: int, variant: str = "fwd") -> int:
+    """Cache-or-heuristic tile width (the ``ops`` dispatch path, no timing)."""
+    hit = _CACHE.get(cache_key(plan, n, variant))
+    if hit is not None:
+        return hit.tn
+    return heuristic_tn(plan, n, variant)
+
+
+def v1_default_tn(plan: BlockPermPlan, n: int) -> int:
+    """Tile width for the v1 revisiting kernel (always fp32).
+
+    v1's per-program working set is one double-buffered block pair plus the
+    materialized Φ tile (Br, Bc); for the huge-Bc plans that trigger the
+    v2→v1 fallback the tile width must shrink accordingly.  If the Φ tile
+    alone busts the budget, the minimum tile is returned — that matches the
+    seed kernel's (pre-existing) capability ceiling."""
+    tn = min(128, _n_bucket(n))
+    fixed = 4 * plan.Br * plan.Bc                       # Φ tile, fp32
+    while tn > _MIN_TN and fixed + 8 * (plan.Bc + plan.Br) * tn > VMEM_BUDGET_BYTES:
+        tn //= 2
+    return tn
+
+
+# ---------------------------------------------------------------------------
+# Active tuning
+# ---------------------------------------------------------------------------
+
+_KERNELS = {
+    "fwd": fsk.flashsketch_pallas,
+    "transpose": fsk.flashsketch_transpose_pallas,
+    "blockrow": fsk.blockrow_pallas,
+}
+
+
+def _candidate_tns(plan: BlockPermPlan, n: int, variant: str) -> Tuple[int, ...]:
+    cap = min(_MAX_TN, _n_bucket(n))
+    tns = []
+    tn = _MIN_TN
+    while tn <= cap:
+        if _vmem_footprint(plan, tn, variant) <= VMEM_BUDGET_BYTES:
+            tns.append(tn)
+        tn *= 2
+    return tuple(tns) or (_MIN_TN,)
+
+
+def _time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time in microseconds of a blocking call."""
+    for _ in range(warmup):
+        fn(*args).block_until_ready()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return 1e6 * float(np.median(times))
+
+
+def _make_operand(plan: BlockPermPlan, n_pad: int, variant: str) -> jnp.ndarray:
+    rows = plan.k_pad if variant == "transpose" else plan.d_pad
+    # Deterministic pseudo-data: tuning only measures time, not quality.
+    x = np.linspace(-1.0, 1.0, num=rows * n_pad, dtype=np.float32)
+    return jnp.asarray(x.reshape(rows, n_pad))
+
+
+def autotune(
+    plan: BlockPermPlan,
+    n: int,
+    variant: str = "fwd",
+    *,
+    tns: Optional[Sequence[int]] = None,
+    warmup: int = 1,
+    iters: int = 3,
+    interpret: Optional[bool] = None,
+) -> TuneResult:
+    """Time the v2 kernel over a ``tn`` sweep and cache the winner."""
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be one of {VARIANTS}, got {variant!r}")
+    key = cache_key(plan, n, variant, interpret)
+    hit = _CACHE.get(key)
+    if hit is not None and hit.source in ("tuned", "loaded"):
+        return hit
+    kernel = _KERNELS[variant]
+    best: Optional[TuneResult] = None
+    last_error: Optional[Exception] = None
+    for tn in (tns or _candidate_tns(plan, n, variant)):
+        n_pad = ((n + tn - 1) // tn) * tn
+        operand = _make_operand(plan, n_pad, variant)
+        fn = jax.jit(lambda x, _tn=tn: kernel(plan, x, tn=_tn, interpret=interpret))
+        try:
+            us = _time_call(fn, operand, warmup=warmup, iters=iters)
+        except Exception as e:  # a failed candidate only narrows the sweep
+            last_error = e
+            continue
+        cand = TuneResult(tn=tn, time_us=us, source="tuned")
+        if _is_better(cand, best):
+            best = cand
+    if best is None:
+        # every candidate failed — that is a bug signal, not a tuning result
+        warnings.warn(
+            f"autotune: all tn candidates failed for {plan.describe()} "
+            f"variant={variant!r}; falling back to heuristic "
+            f"(last error: {last_error!r})")
+        best = TuneResult(tn=heuristic_tn(plan, n, variant), source="heuristic")
+    _CACHE[key] = best
+    return best
+
+
+def autotune_plan(
+    d: int,
+    k: int,
+    n: int,
+    *,
+    kappa: int = 4,
+    s: int = 2,
+    seed: int = 0,
+    dtype: str = "float32",
+    variant: str = "fwd",
+    block_rows_candidates: Optional[Iterable[int]] = None,
+    tns: Optional[Sequence[int]] = None,
+    warmup: int = 1,
+    iters: int = 3,
+) -> Tuple[BlockPermPlan, TuneResult]:
+    """Sweep the ``M``/``B_r`` split *and* ``tn``; return the fastest pair.
+
+    The ``B_r`` sweep changes the padded shapes, so the returned plan must be
+    used in place of a ``make_plan`` default for the win to apply.
+    """
+    if block_rows_candidates is None:
+        base = make_plan(d, k, kappa=kappa, s=s, seed=seed, dtype=dtype)
+        block_rows_candidates = sorted(
+            {br for br in (base.Br // 2, base.Br, base.Br * 2)
+             if br >= max(s, 1) and br % max(s, 1) == 0}
+        )
+    best_plan: Optional[BlockPermPlan] = None
+    best: Optional[TuneResult] = None
+    for br in block_rows_candidates:
+        try:
+            plan = make_plan(d, k, kappa=kappa, s=s, seed=seed,
+                             block_rows=br, dtype=dtype)
+        except ValueError:
+            continue
+        res = autotune(plan, n, variant, tns=tns, warmup=warmup, iters=iters)
+        if _is_better(res, best):
+            best_plan, best = plan, dataclasses.replace(res, block_rows=plan.Br)
+    if best_plan is None or best is None:
+        best_plan = make_plan(d, k, kappa=kappa, s=s, seed=seed, dtype=dtype)
+        best = TuneResult(tn=resolve_tn(best_plan, n, variant),
+                          block_rows=best_plan.Br, source="heuristic")
+    _CACHE[cache_key(best_plan, n, variant)] = best
+    return best_plan, best
+
+
+# ---------------------------------------------------------------------------
+# Persistence (JSON; keys serialized as strings)
+# ---------------------------------------------------------------------------
+
+def save_cache(path: str) -> int:
+    def _row(v: TuneResult) -> Dict:
+        d = dataclasses.asdict(v)
+        # NaN is not valid JSON — untimed entries serialize time_us as null.
+        if not math.isfinite(v.time_us):
+            d["time_us"] = None
+        return d
+
+    payload = {json.dumps(list(k)): _row(v) for k, v in _CACHE.items()}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, allow_nan=False)
+    return len(payload)
+
+
+def load_cache(path: str, *, merge: bool = True) -> int:
+    with open(path) as f:
+        payload = json.load(f)
+    if not merge:
+        clear_cache()
+    for ks, vd in payload.items():
+        key = tuple(json.loads(ks))
+        t = vd.get("time_us")
+        _CACHE[key] = TuneResult(
+            tn=int(vd["tn"]),
+            block_rows=vd.get("block_rows"),
+            time_us=float(t) if t is not None else float("nan"),
+            source="loaded",
+        )
+    return len(payload)

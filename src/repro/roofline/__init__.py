@@ -1,1 +1,5 @@
-"""Roofline analysis from compiled dry-run artifacts (no real hardware)."""
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+``sketch_model`` adds an analytic per-kernel model for the FlashSketch
+v1/v2 generations (MXU / VPU-hash / HBM terms, mixed-precision aware).
+"""

@@ -1,6 +1,9 @@
 """TPU v5e hardware constants (assignment §ROOFLINE ANALYSIS)."""
 
 PEAK_FLOPS_BF16 = 197e12        # per chip
+PEAK_FLOPS_FP32 = 98.5e12       # per chip, fp32 MXU inputs (half the bf16 rate)
+PEAK_FLOPS_VPU = 2e12           # per chip, element-wise ops (order-of-magnitude
+                                # estimate; used only for hash-cost modeling)
 HBM_BW = 819e9                  # bytes/s per chip
 ICI_LINK_BW = 50e9              # bytes/s per link
 HBM_PER_CHIP = 16 * 2**30       # 16 GiB

@@ -1,0 +1,123 @@
+"""Analytic roofline model for the FlashSketch kernel generations.
+
+Models one application ``Y = S A`` (or the transpose) on a single TPU chip
+as ``max(MXU term, VPU term, HBM term)``:
+
+  * MXU — the one-hot Φ contraction: ``2·κ·B_r·d_pad·n`` MACs·2, identical
+    for v1 and v2 (fusing the κ reduction moves *where* the adds happen,
+    not how many).
+  * VPU — Φ construction from counter-based hashes.  v1 rebuilds the
+    (B_r, B_c) tile for every program ``(j, g, ℓ)`` ⇒ n/T_n rebuilds per
+    block pair; v2 caches the stacked Φ in VMEM scratch and rebuilds only
+    at ``j == 0`` ⇒ exactly κ·M tile builds per launch, an n/T_n-fold
+    saving.
+  * HBM — the dominant term in the paper's d ≫ k regime.  Both versions
+    stream each input block κ times (every input block feeds κ output
+    blocks).  v1's κ-revisiting grid reduction charges a read-modify-write
+    of the fp32 output tile per revisit (``(2κ−1)·k_pad·n`` fp32 accesses,
+    the semantics the paper ascribes to scatter-style sketches); v2 writes
+    each output tile exactly once.  With ``dtype="bfloat16"`` v2 halves
+    the input stream on top (fp32 accumulate in-register, per Jeendgar et
+    al. sketching is robust to this rounding).  v1 is fp32-only.
+
+These terms feed ``benchmarks/kernel_bench.py`` (modeled speedups alongside
+measured interpret-mode ones) and ``core.variants`` cost models.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.blockperm import SKETCH_VARIANTS, BlockPermPlan
+from repro.roofline import hw
+
+# ~ops per hashed word: 5-word hash_words chain, ~6 ALU ops per mix/combine.
+HASH_OPS_PER_WORD = 30.0
+
+VARIANTS = SKETCH_VARIANTS
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    """Single-chip cost terms for one kernel launch."""
+
+    mxu_flops: float
+    vpu_flops: float
+    hbm_bytes: float
+    # bf16-streaming kernels feed the MXU bf16 inputs (fp32 accumulate);
+    # fp32 streams run at the half-rate fp32 MXU throughput.
+    mxu_peak: float = hw.PEAK_FLOPS_FP32
+
+    @property
+    def compute_s(self) -> float:
+        return self.mxu_flops / self.mxu_peak
+
+    @property
+    def vpu_s(self) -> float:
+        return self.vpu_flops / hw.PEAK_FLOPS_VPU
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / hw.HBM_BW
+
+    @property
+    def modeled_us(self) -> float:
+        return 1e6 * max(self.compute_s, self.vpu_s, self.memory_s)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"mxu": self.compute_s, "vpu": self.vpu_s,
+                 "hbm": self.memory_s}
+        return max(terms, key=terms.get)
+
+
+def kernel_cost(
+    plan: BlockPermPlan,
+    n: int,
+    *,
+    version: str = "v2",
+    variant: str = "fwd",
+    tn: int = 128,
+) -> KernelCost:
+    if version not in ("v1", "v2"):
+        raise ValueError(f"version must be 'v1' or 'v2', got {version!r}")
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be one of {VARIANTS}, got {variant!r}")
+    p = plan
+    # v1 predates the mixed-precision path: always streams fp32.
+    in_itemsize = p.stream_itemsize if version == "v2" else 4
+    n_tiles = max(1, (n + tn - 1) // tn)
+
+    mxu = 2.0 * p.kappa * p.Br * p.d_pad * n
+
+    # Φ tile build: s hash passes over the hashed axis (Bc words for the
+    # column-pattern kernels, Br for blockrow's per-row pattern).
+    words = p.Br if variant == "blockrow" else p.Bc
+    per_tile = HASH_OPS_PER_WORD * p.s * words
+    tile_builds = p.kappa * p.M * (n_tiles if version == "v1" else 1)
+    vpu = per_tile * tile_builds
+
+    if variant == "transpose":
+        in_elems = p.kappa * p.k_pad * n      # Y gathered κ× via inverse maps
+        out_elems = p.d_pad * n
+    else:
+        in_elems = p.kappa * p.d_pad * n      # A streamed κ×
+        out_elems = p.k_pad * n
+    out_accesses = (2 * p.kappa - 1) * out_elems if version == "v1" else out_elems
+    hbm = in_itemsize * in_elems + 4.0 * out_accesses
+
+    peak = hw.PEAK_FLOPS_BF16 if in_itemsize == 2 else hw.PEAK_FLOPS_FP32
+    return KernelCost(mxu_flops=mxu, vpu_flops=vpu, hbm_bytes=hbm,
+                      mxu_peak=peak)
+
+
+def modeled_speedup(
+    plan: BlockPermPlan,
+    n: int,
+    *,
+    variant: str = "fwd",
+    tn: int = 128,
+) -> float:
+    """Modeled-TPU speedup of v2 (at the plan's dtype) over fp32 v1."""
+    v1 = kernel_cost(plan, n, version="v1", variant=variant, tn=tn)
+    v2 = kernel_cost(plan, n, version="v2", variant=variant, tn=tn)
+    return v1.modeled_us / v2.modeled_us

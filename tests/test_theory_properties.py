@@ -10,6 +10,8 @@ Invariants checked:
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the 'test' extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import coherence, hashing, wiring
