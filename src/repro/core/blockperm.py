@@ -167,6 +167,34 @@ def make_plan(
     (keeps the one-hot MXU contraction below the v5e ridge point, see
     DESIGN.md §2) while M ≥ κ (edge-disjointness needs κ ≤ M) and B_r ≥ s.
     d and k are padded up to M·B_c and M·B_r.
+
+    Args:
+      d: logical input dimension (rows of the matrices to be sketched).
+      k: REQUESTED sketch dimension; the effective ``plan.k`` is rounded
+        UP to ``M·B_r`` (never truncated — truncation would break the
+        exactly-κs-nonzeros-per-column property and unbiasedness).
+      kappa: block degree κ ≥ 1 — number of permuted block patterns whose
+        union forms S.  More κ → better embedding, more HBM traffic
+        (input streamed κ times).
+      s: intra-block nonzeros per column; must divide the resulting B_r
+        (powers of two always do).  κ·s is the total nonzeros per column
+        of S, each of magnitude 1/√(κs).
+      seed: master seed; all randomness (wiring + intra-block hashes)
+        derives from it deterministically.
+      block_rows: pin B_r explicitly (rounded up to a power of two);
+        disables the VMEM-budget auto-shrink.
+      max_block_rows: cap on the auto-chosen B_r.
+      dtype: streaming precision, ``"float32"`` (default) or
+        ``"bfloat16"``.  Controls only how kernels STREAM the input from
+        HBM (``plan.stream_dtype``) — Φ entries (±1/0) are exact in bf16
+        and accumulation is always fp32, so bf16 halves the dominant
+        memory term at a small rounding cost on A.  Anything else raises
+        ``ValueError``.
+
+    Returns:
+      A frozen, hashable ``BlockPermPlan`` suitable as a static jit
+      argument; pass it to ``repro.kernels.ops.sketch_apply`` (valid
+      ``impl=`` values there: ``"auto" | "pallas" | "pallas_v1" | "xla"``).
     """
     if d <= 0 or k <= 0:
         raise ValueError("d and k must be positive")
@@ -217,8 +245,19 @@ def make_plan(
 def block_rows_signs(plan: BlockPermPlan, g, h, u, i):
     """Destination row in [Br] and sign for nonzero i of column u of block (g,h).
 
-    All of (g, h, u, i) may be arrays (broadcastable); returns (rows int32,
-    signs float32).
+    Args:
+      plan: the frozen sketch draw (supplies seed and chunk height B_r/s).
+      g, h: output/input block indices in [M].
+      u: column index within the block, in [B_c].
+      i: nonzero index within the column, in [s] (selects the row chunk).
+      All of (g, h, u, i) may be arrays (broadcastable against each other);
+      integer dtypes are cast to uint32 for hashing.
+
+    Returns:
+      ``(rows, signs)``: int32 rows in ``[0, B_r)`` (nonzero i lands in
+      chunk i, i.e. ``rows // (B_r/s) == i``) and float32 signs in {±1}.
+      Both the jnp reference oracle and the Pallas kernel body call THIS
+      function, so the streams are bit-identical by construction.
     """
     hsh = hashing.hash_words(
         np.uint32(plan.seed),
@@ -234,9 +273,17 @@ def block_rows_signs(plan: BlockPermPlan, g, h, u, i):
 
 
 def dense_block(plan: BlockPermPlan, g, h) -> jnp.ndarray:
-    """Materialize Φ_{g,h} ∈ R^{Br×Bc} (entries ±1, unscaled) via one-hot sum.
+    """Materialize Φ_{g,h} ∈ R^{Br×Bc} via one-hot sum.
 
-    Used by the reference oracle and (tile-wise) inside the Pallas kernel.
+    Args:
+      plan: the frozen sketch draw.
+      g, h: scalar block indices in [M] (python ints or traced scalars).
+
+    Returns:
+      ``(Br, Bc)`` float32 array with entries in {-1, 0, +1} — exactly s
+      nonzeros per column, one per B_r/s-row chunk — WITHOUT the global
+      1/√(κs) scale.  Used by the reference oracle and (tile-wise) inside
+      the Pallas kernel; bit-exactness between the two is tested.
     """
     u = jnp.arange(plan.Bc, dtype=jnp.int32)            # (Bc,)
     i = jnp.arange(plan.s, dtype=jnp.int32)             # (s,)
@@ -250,7 +297,13 @@ def dense_block(plan: BlockPermPlan, g, h) -> jnp.ndarray:
 
 
 def materialize_sketch_matrix(plan: BlockPermPlan) -> jnp.ndarray:
-    """Full S ∈ R^{k_pad × d_pad} (dense), for tests and tiny benchmarks only."""
+    """Full S ∈ R^{k_pad × d_pad} as a DENSE fp32 array — tests and tiny
+    benchmarks only (O(k_pad · d_pad) memory defeats the whole point of
+    the sketch at real sizes).  Includes the 1/√(κs) scale, so
+    ``S @ A_padded`` equals ``ops.sketch_apply(plan, A)`` up to fp32
+    rounding regardless of impl; the streaming ``dtype`` knob does not
+    apply here (dense math is fp32 throughout).
+    """
     pi = wiring.wiring_table(plan.seed, plan.M, plan.kappa)  # (κ, M)
     S = jnp.zeros((plan.k_pad, plan.d_pad), dtype=jnp.float32)
     for g in range(plan.M):

@@ -105,7 +105,28 @@ def sketch_apply(
     tn: Optional[int] = None,
     dtype: Optional[str] = None,
 ):
-    """Y = S A.  A: (d, n) -> (k, n).  Differentiable in A."""
+    """Apply the sketch: ``Y = S A``.
+
+    Args:
+      plan: frozen ``BlockPermPlan`` (static — participates in jit keys).
+      A: ``(d, n)`` float array; rows beyond ``plan.d`` must not exist
+        (padding to ``d_pad`` is internal).  Any float dtype; the kernel
+        streams it in ``plan.stream_dtype`` (see ``dtype`` below).
+      impl: ``"auto"`` (pallas on TPU, xla elsewhere), ``"pallas"`` (v2
+        fused-κ kernel; silently downgrades to v1 if the fused Φ scratch
+        cannot fit VMEM), ``"pallas_v1"`` (κ-grid-reduction baseline), or
+        ``"xla"`` (pure-jnp oracle).  Anything else raises ``ValueError``.
+      tn: column-tile width for the Pallas paths; ``None`` defers to the
+        autotuner cache (trace-time lookup).  Ignored by ``"xla"``.
+      dtype: streaming-precision override, ``"float32"`` or ``"bfloat16"``;
+        ``None`` keeps the plan's knob.  bf16 halves the HBM stream of A
+        while the MXU accumulates in fp32; the output is always fp32.
+
+    Returns:
+      ``(k, n)`` fp32 array, ``k = plan.k`` (the padded-up sketch dim).
+      Differentiable in A: the VJP is ``sketch_apply_t`` (``Sᵀ dY``) at the
+      same impl/tn/dtype.
+    """
     return _sketch_apply_impl(plan, A, impl, tn, dtype)
 
 
@@ -136,7 +157,22 @@ def sketch_apply_t(
     tn: Optional[int] = None,
     dtype: Optional[str] = None,
 ):
-    """X = Sᵀ Y.  Y: (k, n) -> (d, n).  Differentiable in Y."""
+    """Apply the transposed sketch: ``X = Sᵀ Y`` (the un-sketch / VJP map).
+
+    Args:
+      plan: frozen ``BlockPermPlan``.
+      Y: ``(k, n)`` float array (``k = plan.k`` or ``plan.k_pad``; shorter
+        inputs are zero-padded to ``k_pad``).  Streamed in the effective
+        streaming dtype, accumulated in fp32.
+      impl: same valid values and semantics as ``sketch_apply``:
+        ``"auto" | "pallas" | "pallas_v1" | "xla"``.
+      tn / dtype: as in ``sketch_apply`` (``dtype`` rounds the Y stream to
+        bf16 when ``"bfloat16"``; accumulation stays fp32).
+
+    Returns:
+      ``(d, n)`` fp32 array (logical d, padding stripped).  Differentiable
+      in Y; the VJP is ``sketch_apply``.
+    """
     return _sketch_apply_t_impl(plan, Y, impl, tn, dtype)
 
 
@@ -186,7 +222,24 @@ def blockrow_apply(
     tn: Optional[int] = None,
     dtype: Optional[str] = None,
 ):
-    """FLASHBLOCKROW forward (no VJP — appendix-C variant is eval-only)."""
+    """FLASHBLOCKROW forward: ``Y = S_blockrow A`` (paper App. C).
+
+    The gather-only appendix variant (iid block wiring, per-row pattern):
+    reads A approximately once, but its embedding guarantees are weaker —
+    eval-only, and intentionally has NO custom VJP (it never sits inside a
+    training graph).
+
+    Args:
+      plan: frozen ``BlockPermPlan`` (wiring drawn iid per plan seed).
+      A: ``(d, n)`` float array.
+      impl: ``"auto" | "pallas" | "pallas_v1" | "xla"`` — same dispatch
+        rules as ``sketch_apply``.
+      tn / dtype: as in ``sketch_apply`` (bf16 streams A at half the HBM
+        traffic, fp32 accumulate).
+
+    Returns:
+      ``(k, n)`` fp32 array.
+    """
     plan = _resolve_plan(plan, dtype)
     impl = _resolve_impl(impl)
     if impl == "xla":
@@ -204,7 +257,111 @@ def blockrow_apply(
 
 
 def sketch_vectors(plan: BlockPermPlan, x: jnp.ndarray, impl: Impl = "auto"):
-    """Sketch a single vector or batch-of-vectors laid out (..., d) -> (..., k)."""
+    """Sketch a batch of vectors laid out along the LAST axis.
+
+    Args:
+      plan: the frozen sketch draw (``core.blockperm.make_plan``).
+      x: ``(..., d)`` float array; leading axes are an arbitrary batch.
+      impl: one of ``"auto" | "pallas" | "pallas_v1" | "xla"`` (see
+        ``sketch_apply``).
+
+    Returns:
+      ``(..., k)`` array, ``y[..., :] = S x[..., :]``.  Internally the batch
+      is flattened into the column axis of one ``sketch_apply`` launch.
+    """
     flat = x.reshape(-1, x.shape[-1])                 # (n, d)
     Y = sketch_apply(plan, flat.T, impl)              # (k, n)
     return Y.T.reshape(*x.shape[:-1], plan.k)
+
+
+def sketch_apply_batched(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    impl: Impl = "auto",
+    tn: Optional[int] = None,
+    dtype: Optional[str] = None,
+):
+    """Apply S to a stack of matrices in ONE kernel launch.
+
+    Args:
+      plan: the frozen sketch draw.
+      A: ``(..., d, n)`` float array — a batch of tall matrices sharing the
+        sketch.  The batch axes are folded into the column axis (``S`` acts
+        on the row axis only), so a ``(B, d, n)`` stack costs one launch on
+        a ``(d, B·n)`` operand instead of ``B`` launches (or a vmap, which
+        would re-trace the Pallas kernel per batch layout).
+      impl / tn / dtype: forwarded to ``sketch_apply`` (same valid values).
+
+    Returns:
+      ``(..., k, n)`` array with ``out[b] = S @ A[b]`` for every batch
+      index ``b``.  Differentiable in ``A`` (inherits ``sketch_apply``'s
+      custom VJP).
+    """
+    if A.ndim < 2:
+        raise ValueError(f"A must be at least 2-D (d, n), got shape {A.shape}")
+    batch = A.shape[:-2]
+    d, n = A.shape[-2:]
+    flat = jnp.moveaxis(A.reshape((-1, d, n)), 0, 1).reshape(d, -1)  # (d, B·n)
+    Y = sketch_apply(plan, flat, impl, tn, dtype)                    # (k, B·n)
+    Y = jnp.moveaxis(Y.reshape(plan.k, -1, n), 1, 0)
+    return Y.reshape(*batch, plan.k, n)
+
+
+def sketch_qr(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    impl: Impl = "auto",
+    tn: Optional[int] = None,
+    dtype: Optional[str] = None,
+    factorization: str = "qr",
+):
+    """Sketch-and-factor: ``SA = S A`` plus a triangular factor of ``SA``.
+
+    The workhorse of sketch-and-precondition (Rokhlin–Tygert / Blendenpik
+    lineage): for tall ``A (d, n)`` with ``d >> n``, the ``(k, n)`` sketch
+    ``SA`` is an approximate isometry on ``range(A)``, so the triangular
+    ``R`` with ``SAᵀ SA = Rᵀ R`` makes ``A R⁻¹`` nearly orthonormal — LSQR
+    on ``A R⁻¹`` then converges in O(1) iterations regardless of cond(A).
+
+    Args:
+      plan: the frozen sketch draw; ``plan.k`` should be a few × n.
+      A: ``(d, n)`` float array, ``d >> n``.
+      impl / tn / dtype: forwarded to ``sketch_apply`` (``dtype="bfloat16"``
+        streams the sketch in bf16; the factorization itself is always fp32).
+      factorization: ``"qr"`` (Householder QR of SA — backward stable) or
+        ``"chol"`` (Cholesky of ``SAᵀSA`` — cheaper, squares the condition
+        number of the sketch; fine when ``SA`` is well-conditioned, which a
+        subspace-embedding sketch guarantees).
+
+    Returns:
+      ``(SA, R)``: the sketch ``(k, n)`` and upper-triangular ``R (n, n)``
+      with ``SAᵀ SA = Rᵀ R`` (up to rounding).  ``R`` may be singular only
+      if ``A`` is rank-deficient.
+    """
+    SA = sketch_apply(plan, A, impl, tn, dtype).astype(jnp.float32)
+    return SA, triangular_factor(SA, factorization)
+
+
+def triangular_factor(SA: jnp.ndarray, factorization: str = "qr") -> jnp.ndarray:
+    """Upper-triangular R (n, n) with ``SAᵀ SA = Rᵀ R``, positive diagonal.
+
+    Args:
+      SA: ``(k, n)`` fp32 matrix (typically a sketch).
+      factorization: ``"qr"`` (Householder QR — backward stable) or
+        ``"chol"`` (Cholesky of the Gram — cheaper, squares the condition
+        number).  Anything else raises ``ValueError``.
+
+    Returns:
+      R with a positive diagonal (fixes the QR/Cholesky sign ambiguity so
+      the two factorizations agree and ``R⁻¹`` is well-defined).
+    """
+    if factorization == "qr":
+        R = jnp.linalg.qr(SA, mode="r")
+    elif factorization == "chol":
+        R = jnp.linalg.cholesky(SA.T @ SA).T  # upper-triangular
+    else:
+        raise ValueError(
+            f"factorization must be 'qr' or 'chol', got {factorization!r}")
+    sgn = jnp.sign(jnp.diagonal(R))
+    sgn = jnp.where(sgn == 0, 1.0, sgn)
+    return R * sgn[:, None]

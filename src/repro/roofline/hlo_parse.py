@@ -136,16 +136,23 @@ _SKIP_OPS = {
 
 
 def _split_operands(rest: str) -> List[str]:
-    """Operand names from 'op(%a, %b), attr=...' (first paren level)."""
+    """Operand names from 'op(%a, %b), attr=...' (first paren level).
+
+    Modern XLA dumps inline each operand's type — ``dot(f32[64,64]{1,0}
+    %lhs, f32[64,64]{1,0} %rhs)`` — so commas inside ``[]``/``{}``/nested
+    ``()`` must not split, and the operand name is the (last) %-prefixed
+    token of the piece, not its first word.  Older dumps (bare ``%lhs``)
+    parse identically.
+    """
     out, depth, cur = [], 0, []
     for ch in rest:
-        if ch == "(" :
+        if ch in "([{":
             depth += 1
             cur.append(ch)
-        elif ch == ")":
-            if depth == 0:
-                break
-            depth -= 1
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
+                break               # end of the operand list
+            depth = max(0, depth - 1)
             cur.append(ch)
         elif ch == "," and depth == 0:
             out.append("".join(cur).strip())
@@ -156,7 +163,11 @@ def _split_operands(rest: str) -> List[str]:
         out.append("".join(cur).strip())
     names = []
     for o in out:
-        m = re.match(r"%?([\w.\-]+)", o)
+        pct = re.findall(r"%([\w.\-]+)", o)
+        if pct:
+            names.append(pct[-1])
+            continue
+        m = re.match(r"([\w.\-]+)", o)
         if m:
             names.append(m.group(1))
     return names

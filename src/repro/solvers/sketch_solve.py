@@ -1,0 +1,120 @@
+"""One-shot sketch-and-solve: regression and low-rank approximation.
+
+Unlike sketch-and-precondition (which iterates to machine precision),
+sketch-and-solve answers from the sketch alone: solve the small sketched
+problem and accept a ``(1+ε)``-optimal answer, where ε is the sketch's
+subspace-embedding distortion (ε ≈ √(n/k) for a k-row sketch of an
+n-dimensional subspace).  One pass over A, no iterations — the right tool
+when A is streamed once or a few digits suffice.
+
+The low-rank path is the sketched randomized range-finder: a row-space
+sketch ``B = S A`` captures the dominant right-singular subspace of A
+(Halko–Martinsson–Tropp, single-pass variant), and projecting A onto it
+reduces the SVD to a tall-thin problem.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.blockperm import BlockPermPlan
+from repro.kernels import ops
+
+
+def subspace_embedding_eps(plan: BlockPermPlan, n: int) -> float:
+    """Heuristic embedding distortion ε of the plan for an n-dim subspace.
+
+    Sparse-sign embeddings with κs nonzeros/column behave like ε ≈ √(n/k)
+    once κs ≥ 2 (Cohen's bound, constants ≈ 1 in practice); a κs = 1
+    (single-permutation, s=1) sketch is a weaker OSNAP and gets a 2×
+    penalty.  Used for sanity bounds and adaptive-restart budgeting, not
+    as a guarantee.
+    """
+    base = math.sqrt(n / max(plan.k, 1))
+    return min(2.0 * base if plan.nnz_per_col < 2 else base, 0.99)
+
+
+def sketch_and_solve_lstsq(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    b: jnp.ndarray,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Direct sketch-and-solve regression: ``argmin_x ||S A x - S b||``.
+
+    A and b are sketched TOGETHER in one kernel launch (b rides along as an
+    extra column), then the small ``(k, n)`` problem is solved by QR-based
+    lstsq.  Residual guarantee: ``||A x̂ - b|| ≤ (1+ε)/(1-ε) · min_x ||A x - b||``
+    when S is an ε-embedding of ``range([A | b])``.
+
+    Args:
+      plan: sketch plan with ``plan.k ≳ 4 (n+1)`` rows for a useful ε.
+      A: (d, n); b: (d,).
+      impl: kernel dispatch (see ``ops.sketch_apply``).
+
+    Returns:
+      x̂ (n,), in fp32 (the sketched problem is solved in fp32).
+    """
+    Ab = jnp.concatenate([A, b[:, None]], axis=1).astype(jnp.float32)
+    SAb = ops.sketch_apply(plan, Ab, impl)
+    SA, Sb = SAb[:, :-1], SAb[:, -1]
+    return jnp.linalg.lstsq(SA, Sb)[0]
+
+
+def sketched_rowspace(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    rank: int,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Orthonormal basis V (n, rank) of the approximate dominant row space.
+
+    ``B = S A`` is a (k, n) row-space sketch of A; the top right-singular
+    vectors of B approximate those of A when S embeds the corresponding
+    subspace.  This is the single-pass range-finder primitive behind
+    ``sketched_svd``.
+    """
+    B = ops.sketch_apply(plan, A.astype(jnp.float32), impl)     # (k, n)
+    _, _, Vt = jnp.linalg.svd(B, full_matrices=False)
+    return Vt[:rank].T                                          # (n, rank)
+
+
+def sketched_svd(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    rank: int,
+    oversample: int = 8,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sketched low-rank SVD: ``A ≈ U diag(s) Vt`` with ``U (d, rank)``.
+
+    Pipeline: row-space sketch ``B = S A`` (one FlashSketch launch — the
+    expensive O(d·n) sketch work) → orthonormal ``V`` from B's top
+    ``rank + oversample`` right-singular vectors → project ``C = A V``
+    (tall-thin, d × (rank+oversample)) → exact SVD of C, truncated.
+
+    Args:
+      plan: sketch plan; needs ``plan.k ≥ rank + oversample`` (more rows →
+        tighter spectral capture).
+      A: (d, n) with d >> n.
+      rank: target rank r.
+      oversample: extra range-finder columns p (standard HMT slack).
+      impl: kernel dispatch.
+
+    Returns:
+      (U, s, Vt): (d, r), (r,), (r, n) — the rank-r approximation
+      ``U @ diag(s) @ Vt ≈ A``, exact when A has rank ≤ r and the sketch
+      preserves its row space.
+    """
+    ell = min(rank + oversample, min(A.shape))
+    if plan.k < ell:
+        raise ValueError(
+            f"plan.k={plan.k} must be >= rank+oversample={ell} "
+            f"for the range-finder to capture the subspace")
+    V = sketched_rowspace(plan, A, ell, impl)                   # (n, ℓ)
+    C = A.astype(jnp.float32) @ V                               # (d, ℓ)
+    U, svals, Wt = jnp.linalg.svd(C, full_matrices=False)
+    Vt = (V @ Wt.T).T                                           # (ℓ, n)
+    return U[:, :rank], svals[:rank], Vt[:rank]

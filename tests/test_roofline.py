@@ -76,12 +76,12 @@ def test_refined_fusion_param_bytes():
     assert refined == full
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="pre-existing seed failure: the HLO walker undercounts scan-body "
-           "flops on this CPU XLA version (counts the body once, not per trip)",
-)
 def test_end_to_end_tiny_compile():
+    # Regression for a real seed failure: modern XLA dumps inline operand
+    # types ("dot(f32[64,64]{1,0} %lhs, ...)"), which the old operand
+    # splitter mis-parsed (split on commas inside shapes, took "f32" as the
+    # operand name), collapsing dot flops to 2*out_elems.  The walker now
+    # recovers operand names from the %-token, so loop flops count per trip.
     import jax
     import jax.numpy as jnp
 

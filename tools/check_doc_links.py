@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Check internal markdown links in docs/*.md and README.md.
+
+Verifies that every relative link target exists, and that heading-anchor
+fragments (``file.md#some-heading``) resolve to a heading in the target
+file (GitHub slug rules: lowercase, punctuation stripped, spaces->dashes).
+External (http/https/mailto) links are ignored.
+
+    python tools/check_doc_links.py          # from the repo root
+Exit status 1 with a report if any link is broken.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown/punctuation, lowercase,
+    spaces to dashes."""
+    text = re.sub(r"[`*_]", "", heading).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set:
+    return {github_slug(h) for h in HEADING_RE.findall(path.read_text())}
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list:
+    errors = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, fragment = target.partition("#")
+        if path_part:
+            resolved = (md.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(root)}: broken link "
+                              f"-> {target} (no such file)")
+                continue
+        else:
+            resolved = md
+        if fragment:
+            if resolved.suffix != ".md":
+                continue
+            if fragment not in anchors_of(resolved):
+                errors.append(f"{md.relative_to(root)}: broken anchor "
+                              f"-> {target} (no heading "
+                              f"'#{fragment}' in {resolved.name})")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = sorted((root / "docs").glob("*.md")) + [root / "README.md"]
+    errors = []
+    checked = 0
+    for md in files:
+        if md.exists():
+            checked += 1
+            errors.extend(check_file(md, root))
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} broken link(s) across {checked} file(s)")
+        return 1
+    print(f"ok: {checked} markdown file(s), all internal links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
