@@ -1,7 +1,12 @@
 """GraSS: per-example gradient → sparsify → sketch → feature cache →
-attribution (paper §7.4 / App. E).  The random-projection step — the paper's
-measured bottleneck — is FlashSketch; any variant from
-``repro.core.variants`` can be swapped in for the Pareto benchmarks.
+attribution (paper §7.4 / App. E).  The sparsify→sketch step — the paper's
+measured bottleneck — runs on the gather-fused batched FlashSketch path:
+per-example gradients are produced in ``lax.scan`` chunks (vmapped inside
+each chunk), and every chunk is sketched in ONE kernel launch that gathers
+the sparsify mask's coordinates directly out of the stacked gradients — no
+``grads[:, mask]`` intermediate, no per-example launches.  Any variant from
+``repro.core.variants`` can be swapped in for the Pareto benchmarks
+(families without a fused kernel fall back to a materializing gather).
 """
 from __future__ import annotations
 
@@ -27,6 +32,10 @@ class GrassPipelineConfig:
     seed: int = 0
     attribution: str = "dot"       # "dot" | "kernel" (TRAK preconditioned)
     lam_rel: float = 1.0           # kernel ridge relative to mean eigenvalue
+    chunk: int = 64                # examples per scan step / fused launch
+    fused: bool = True             # gather-fused sketch (False: materialize
+                                   # grads[:, mask] — the pre-fusion path,
+                                   # kept for A/B tests and benchmarks)
 
 
 def _flat_grad_fn(params):
@@ -38,14 +47,31 @@ def _flat_grad_fn(params):
 
 
 def sparsify_mask(d_total: int, d_keep: int, seed: int) -> jnp.ndarray:
-    """GraSS gradient sparsification: a fixed random coordinate subset."""
+    """GraSS gradient sparsification: a fixed random coordinate subset.
+
+    Selects the d_keep coordinates with the SMALLEST hash scores via
+    ``lax.top_k`` on the bitwise complement — O(d log k) with no d-length
+    sort buffer, and bitwise-identical to the historical full
+    ``argsort(scores)[:d_keep]`` (uint32 complement reverses the order
+    exactly; both break ties toward the lower index).
+    """
     u = jnp.arange(d_total, dtype=jnp.uint32)
     scores = hashing.hash_words(np.uint32(seed), np.uint32(0x6A55), u)
-    idx = jnp.argsort(scores)[:d_keep]
+    _, idx = jax.lax.top_k(~scores, d_keep)
     return jnp.sort(idx)
 
 
 class GrassPipeline:
+    """Feature-cache builder around the fused batched sketch.
+
+    ``featurize`` runs the per-example gradients in ``cfg.chunk``-sized
+    ``lax.scan`` steps (vmap inside the step), each chunk feeding one
+    gather-fused batched sketch launch; the feature cache is assembled
+    chunk by chunk.  With ``cfg.fused=False`` the same scan materializes
+    ``grads[:, mask]`` before sketching (the seed behavior, bit-compatible
+    features).
+    """
+
     def __init__(self, cfg: GrassPipelineConfig, params):
         self.cfg = cfg
         self.params = params
@@ -58,16 +84,43 @@ class GrassPipeline:
             **dict(cfg.sketch_kwargs))
         self._gfn = _flat_grad_fn(params)
 
+        def sketch_chunk(grads):                    # (c, D) -> (c, k)
+            if cfg.fused:
+                return self.sketch.apply_gather(grads.T, self.mask).T
+            return self.sketch.apply(grads[:, self.mask].T).T
+
         def featurize(p, xs, ys):
-            grads = jax.vmap(lambda x, y: self._gfn(p, x, y))(xs, ys)  # (n, D)
-            sparse = grads[:, self.mask]                               # (n, d)
-            return self.sketch.apply(sparse.T).T                       # (n, k)
+            b = xs.shape[0]
+            c = max(1, min(cfg.chunk, b))
+            n_chunks = -(-b // c)
+            pad = n_chunks * c - b
+            if pad:
+                # repeat the first example: gradients stay well-defined and
+                # the padded features are sliced off below
+                xs = jnp.concatenate([xs, jnp.broadcast_to(
+                    xs[:1], (pad,) + xs.shape[1:])])
+                ys = jnp.concatenate([ys, jnp.broadcast_to(
+                    ys[:1], (pad,) + ys.shape[1:])])
+            xc = xs.reshape((n_chunks, c) + xs.shape[1:])
+            yc = ys.reshape((n_chunks, c) + ys.shape[1:])
+
+            def step(_, xy):
+                xb, yb = xy
+                grads = jax.vmap(lambda x, y: self._gfn(p, x, y))(xb, yb)
+                return 0, sketch_chunk(grads)       # (c, k) per chunk
+
+            _, feats = jax.lax.scan(step, 0, (xc, yc))
+            return feats.reshape(n_chunks * c, -1)[:b]
 
         self._featurize = jax.jit(featurize)
 
     # ---------------------------------------------------------------- cache
     def build_cache(self, x_train, y_train, batch: int = 256) -> Tuple[jnp.ndarray, float]:
-        """Feature cache Φ ∈ (n_train, k); returns (cache, sketch_seconds)."""
+        """Feature cache Φ ∈ (n_train, k); returns (cache, sketch_seconds).
+
+        Each ``batch`` slab runs one jitted scan whose per-chunk fused
+        launches write the cache incrementally (chunk size ``cfg.chunk``).
+        """
         feats = []
         t = 0.0
         for i in range(0, x_train.shape[0], batch):

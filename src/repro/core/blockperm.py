@@ -40,16 +40,27 @@ MIN_TILE_N = 8
 # The kernel variants (single source; tune/sketch_model/benchmarks reuse it).
 SKETCH_VARIANTS = ("fwd", "transpose", "blockrow")
 
+# Gather-fused variants: the input stays in HBM and masked rows are DMA'd
+# straight into a VMEM gather scratch (no A[mask] intermediate), so the
+# pipelined input blocks are replaced by one (κ·B_c, tn) scratch buffer.
+GATHER_VARIANTS = ("fwd_gather", "blockrow_gather")
+
 
 def fused_variant_bytes(kappa: int, Br: int, Bc: int, tn: int,
                         itemsize: int = 4, variant: str = "fwd") -> int:
     """v2 VMEM footprint of one kernel variant: stacked Φ scratch +
-    double-buffered pipelined input blocks + output tile.  Must track the
+    double-buffered pipelined input blocks (or the row-gather scratch for
+    the ``*_gather`` variants) + output tile.  Must track the
     scratch/pipeline layout in kernels/flashsketch.py."""
     phi = kappa * Br * Bc * itemsize
     if variant == "transpose":
         ins = 2 * kappa * Br * tn * itemsize
         out = Bc * tn * 4
+    elif variant in GATHER_VARIANTS:
+        # input lives in HBM; rows are DMA'd into a single-buffered
+        # (κ·Bc, tn) gather scratch
+        ins = kappa * Bc * tn * itemsize
+        out = Br * tn * 4
     else:                                   # fwd / blockrow
         ins = 2 * kappa * Bc * tn * itemsize
         out = Br * tn * 4

@@ -52,6 +52,28 @@ class SketchBase:
     def apply(self, A: jnp.ndarray) -> jnp.ndarray:
         raise NotImplementedError
 
+    def apply_gather(self, A: jnp.ndarray, row_index) -> jnp.ndarray:
+        """``Y = S @ A[row_index, :]`` for ``A (d_src, n)``.
+
+        Base implementation materializes the gather; families with fused
+        index-streamed kernels (blockperm, blockrow) override it so the
+        GraSS sparsify→sketch step never writes the intermediate.
+        """
+        return self.apply(A[jnp.asarray(row_index)])
+
+    def apply_batched(self, A: jnp.ndarray) -> jnp.ndarray:
+        """``out[b] = S @ A[b]`` for a stack ``(..., d, n)``.
+
+        Every family's apply is column-wise linear, so the batch folds into
+        the column axis of ONE apply — no per-example launches.
+        """
+        batch = A.shape[:-2]
+        d, n = A.shape[-2:]
+        flat = jnp.moveaxis(A.reshape((-1, d, n)), 0, 1).reshape(d, -1)
+        Y = self.apply(flat)
+        return jnp.moveaxis(Y.reshape(Y.shape[0], -1, n), 1, 0).reshape(
+            *batch, Y.shape[0], n)
+
     def cost_model(self, n: int) -> CostModel:
         raise NotImplementedError
 
@@ -213,6 +235,15 @@ class BlockPermSketch(SketchBase):
     def apply(self, A):
         return kops.sketch_apply(self.plan, A, self.impl)
 
+    def apply_gather(self, A, row_index):
+        # gather-fused kernel: no A[row_index] intermediate
+        return kops.sketch_apply(self.plan, A, self.impl, row_index=row_index)
+
+    def apply_batched(self, A, row_index=None):
+        # one launch for the whole stack (batch folded into the column axis)
+        return kops.sketch_apply_batched(self.plan, A, self.impl,
+                                         row_index=row_index)
+
     def apply_t(self, Y):
         return kops.sketch_apply_t(self.plan, Y, self.impl)
 
@@ -275,6 +306,10 @@ class BlockRowSketch(SketchBase):
 
     def apply(self, A):
         return kops.blockrow_apply(self.plan, A, self.impl)
+
+    def apply_gather(self, A, row_index):
+        return kops.blockrow_apply(self.plan, A, self.impl,
+                                   row_index=row_index)
 
     def cost_model(self, n: int) -> CostModel:
         p = self.plan

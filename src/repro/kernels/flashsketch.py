@@ -19,6 +19,15 @@ v2 (default) — fused-κ single-write formulation:
     the MXU accumulates in fp32 (``preferred_element_type``).  This halves
     the dominant HBM term in the paper's d ≫ k regime.
 
+v2-gather (``*_gather``) — the same fused-κ formulation with the input row
+gather folded INTO the kernel: the operand stays in HBM (``pltpu.ANY``)
+and an arbitrary per-row index map (e.g. the GraSS sparsify mask) is
+scalar-prefetched; each program DMAs its κ·B_c masked rows straight into a
+VMEM gather scratch and contracts the cached stacked Φ against it.
+``S @ A[mask, :]`` in one launch — no ``A[mask]`` intermediate ever touches
+HBM.  The contraction shape and operand values are identical to the
+non-gather v2 kernel fed a materialized gather, so the two are bit-exact.
+
 v1 — the original output-revisiting grid reduction, grid ``(n/T_n, M, κ)``
 with κ as an arbitrary-order reduction axis and Φ rebuilt for every
 ``(j, g, ℓ)`` program.  Kept as a reference oracle for equivalence tests
@@ -207,6 +216,72 @@ def _fused_transpose_kernel(tab_ref, *refs, plan: BlockPermPlan, scale):
     ) * scale
 
 
+def _fused_gather_kernel(tab_ref, rmap_ref, a_any, o_ref, gat_ref, phi_ref,
+                         sem, *, plan: BlockPermPlan, scale, phi_fn, tn: int):
+    """Gather-fused fwd/blockrow body: Y[g, j] = Φ* · A[rmap[blocks], j·tn:].
+
+    The operand ``a_any`` is the FULL source matrix left in HBM
+    (``memory_space=ANY``); ``rmap_ref`` is the scalar-prefetched per-row
+    index map of the *masked* input (length d_pad, padding entries pointing
+    at a caller-appended zero row).  Each program DMAs its κ·B_c gathered
+    rows into ``gat_ref`` (VMEM) row by row — the TPU analogue of the
+    coalesced index-streamed gather — then reuses the v2 single-write
+    contraction against the Φ scratch cached across column tiles.
+    """
+    g = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _build_phi():
+        for ell in range(plan.kappa):
+            h = tab_ref[ell, g]
+            phi_ref[:, ell * plan.Bc:(ell + 1) * plan.Bc] = (
+                phi_fn(plan, g, h).astype(phi_ref.dtype)
+            )
+
+    def _row_dma(ell, h, r):
+        src = rmap_ref[h * plan.Bc + r]
+        return pltpu.make_async_copy(
+            a_any.at[src, pl.ds(j * tn, tn)],
+            gat_ref.at[ell * plan.Bc + r, :],
+            sem,
+        )
+
+    # Issue every row copy before waiting on any: the destinations are
+    # disjoint scratch rows and the DMA semaphore counts completions, so
+    # up to κ·B_c transfers are in flight at once instead of paying κ·B_c
+    # serialized HBM round-trips per program.
+    for ell in range(plan.kappa):
+        h = tab_ref[ell, g]
+        jax.lax.fori_loop(
+            0, plan.Bc,
+            lambda r, _, _ell=ell, _h=h: (_row_dma(_ell, _h, r).start(), 0)[1],
+            0)
+    for ell in range(plan.kappa):
+        h = tab_ref[ell, g]
+        jax.lax.fori_loop(
+            0, plan.Bc,
+            lambda r, _, _ell=ell, _h=h: (_row_dma(_ell, _h, r).wait(), 0)[1],
+            0)
+
+    if plan.d < plan.d_pad:
+        # Padded masked rows (global index ≥ plan.d) gathered a placeholder
+        # source row; zero them here so padding contributes exact zeros —
+        # bit-identical to zero-padding a materialized gather, without ever
+        # copying A to append a zero row.
+        for ell in range(plan.kappa):
+            h = tab_ref[ell, g]
+            rows = h * plan.Bc + jax.lax.broadcasted_iota(
+                jnp.int32, (plan.Bc, 1), 0)
+            blk = gat_ref[ell * plan.Bc:(ell + 1) * plan.Bc, :]
+            gat_ref[ell * plan.Bc:(ell + 1) * plan.Bc, :] = jnp.where(
+                rows < plan.d, blk, jnp.zeros_like(blk))
+
+    o_ref[...] = jnp.dot(
+        phi_ref[...], gat_ref[...], preferred_element_type=jnp.float32
+    ) * scale
+
+
 # ---------------------------------------------------------------------------
 # pallas_call wrappers (raw; user-facing API with padding/custom_vjp in ops.py)
 # ---------------------------------------------------------------------------
@@ -280,6 +355,34 @@ def _run_fused(plan, kernel, tab, operand, in_block, out_block, phi_shape,
     )(jnp.asarray(tab), *([operand] * plan.kappa))
 
 
+def _run_fused_gather(plan, kernel, tab, row_map, operand, out_block,
+                      out_rows, n, tn, interpret):
+    """Gather launcher: grid (M, n/tn); operand stays in HBM (ANY memory
+    space), masked rows arrive via in-kernel DMA driven by the
+    scalar-prefetched ``row_map``; Φ scratch is cached across j as in v2.
+    """
+    grid = (plan.M, n // tn)
+    cdt = operand.dtype
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(out_block, lambda g, j, tab_ref, rmap_ref: (g, j)),
+        scratch_shapes=[
+            pltpu.VMEM((plan.kappa * plan.Bc, tn), cdt),   # gather scratch
+            pltpu.VMEM((out_block[0], plan.kappa * plan.Bc), cdt),  # Φ*
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((out_rows, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=_compiler_params(interpret, ("parallel", "arbitrary")),
+    )(jnp.asarray(tab), jnp.asarray(row_map, jnp.int32), operand)
+
+
 def _stream(plan: BlockPermPlan, operand: jnp.ndarray) -> jnp.ndarray:
     """Cast the operand to the plan's streaming dtype (bf16 path)."""
     return operand.astype(plan.stream_dtype)
@@ -328,6 +431,67 @@ def flashsketch_transpose_pallas(
         in_block=(plan.Br, tn), out_block=(plan.Bc, tn),
         phi_shape=(plan.kappa * plan.Br, plan.Bc),
         out_rows=plan.d_pad, n=n, tn=tn, interpret=interpret,
+    )
+
+
+def flashsketch_pallas_gather(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    row_map: jnp.ndarray,
+    *,
+    tn: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Y = S · A[row_map, :] in ONE launch — the gather-fused v2 kernel.
+
+    Args:
+      plan: frozen plan for the *masked* input dim (``plan.d`` = rows kept).
+      A: ``(d_src, n)`` source matrix, ``n % tn == 0``.  Stays in HBM,
+        uncopied; the kernel DMAs only the masked rows.
+      row_map: ``(d_pad,)`` int32 — source row of A feeding each padded
+        masked row.  Entries beyond ``plan.d`` may point at any valid row
+        (``ops._row_map_for`` uses 0); the kernel zeroes those gather-
+        scratch rows before the contraction.
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    _, n = A.shape
+    assert row_map.shape == (plan.d_pad,), (row_map.shape, plan.d_pad)
+    assert n % tn == 0, (n, tn)
+    kernel = functools.partial(
+        _fused_gather_kernel, plan=plan, scale=plan.scale, phi_fn=_phi_tile,
+        tn=tn,
+    )
+    return _run_fused_gather(
+        plan, kernel, _fwd_neighbor_table(plan), row_map, _stream(plan, A),
+        out_block=(plan.Br, tn), out_rows=plan.k_pad, n=n, tn=tn,
+        interpret=interpret,
+    )
+
+
+def blockrow_pallas_gather(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    row_map: jnp.ndarray,
+    *,
+    tn: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """FLASHBLOCKROW over gathered rows: Y = S_row · A[row_map, :], fused."""
+    if interpret is None:
+        interpret = _should_interpret()
+    _, n = A.shape
+    assert row_map.shape == (plan.d_pad,), (row_map.shape, plan.d_pad)
+    assert n % tn == 0, (n, tn)
+    scale = plan.scale * math.sqrt(plan.d_pad / plan.k_pad)
+    kernel = functools.partial(
+        _fused_gather_kernel, plan=plan, scale=scale, phi_fn=_phi_rows_tile,
+        tn=tn,
+    )
+    return _run_fused_gather(
+        plan, kernel, _blockrow_table(plan), row_map, _stream(plan, A),
+        out_block=(plan.Br, tn), out_rows=plan.k_pad, n=n, tn=tn,
+        interpret=interpret,
     )
 
 

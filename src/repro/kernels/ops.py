@@ -20,6 +20,15 @@ dispatch, tile selection, and differentiation:
 The VJP of ``Y = S A`` w.r.t. ``A`` is ``Sᵀ dY`` — the transpose kernel —
 so sketching composes with ``jax.grad`` (needed when the sketch sits inside
 a training graph, e.g. sketched gradient compression with error feedback).
+
+Gather-fused path (the GraSS sparsify→sketch fusion): every forward entry
+point takes ``row_index=`` — a ``(plan.d,)`` int array of source rows — and
+computes ``Y = S @ A[row_index, :]`` in ONE kernel launch with no
+``A[row_index]`` intermediate (``sketch_apply_indexed`` is the underlying
+custom_vjp primitive; its VJP scatters ``Sᵀ dY`` back into the masked
+rows).  ``sketch_apply_batched`` folds a stack of matrices into the column
+axis of that same single launch, so a B-example batch of sparsified
+gradients is sketched at full tile width instead of B skinny launches.
 """
 from __future__ import annotations
 
@@ -98,20 +107,34 @@ def _emulate_stream(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3, 4))
-def sketch_apply(
+def _sketch_apply_vjp(
     plan: BlockPermPlan,
     A: jnp.ndarray,
     impl: Impl = "auto",
     tn: Optional[int] = None,
     dtype: Optional[str] = None,
 ):
-    """Apply the sketch: ``Y = S A``.
+    """custom_vjp core of ``sketch_apply`` (VJP is ``Sᵀ dY``)."""
+    return _sketch_apply_impl(plan, A, impl, tn, dtype)
+
+
+def sketch_apply(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    impl: Impl = "auto",
+    tn: Optional[int] = None,
+    dtype: Optional[str] = None,
+    *,
+    row_index: Optional[jnp.ndarray] = None,
+):
+    """Apply the sketch: ``Y = S A`` (or ``S A[row_index, :]``, fused).
 
     Args:
       plan: frozen ``BlockPermPlan`` (static — participates in jit keys).
       A: ``(d, n)`` float array; rows beyond ``plan.d`` must not exist
         (padding to ``d_pad`` is internal).  Any float dtype; the kernel
-        streams it in ``plan.stream_dtype`` (see ``dtype`` below).
+        streams it in ``plan.stream_dtype`` (see ``dtype`` below).  With
+        ``row_index`` the row count is instead the source dim ``d_src``.
       impl: ``"auto"`` (pallas on TPU, xla elsewhere), ``"pallas"`` (v2
         fused-κ kernel; silently downgrades to v1 if the fused Φ scratch
         cannot fit VMEM), ``"pallas_v1"`` (κ-grid-reduction baseline), or
@@ -121,13 +144,20 @@ def sketch_apply(
       dtype: streaming-precision override, ``"float32"`` or ``"bfloat16"``;
         ``None`` keeps the plan's knob.  bf16 halves the HBM stream of A
         while the MXU accumulates in fp32; the output is always fp32.
+      row_index: optional ``(plan.d,)`` int array of source rows; when
+        given, computes ``S @ A[row_index, :]`` with the gather fused into
+        the kernel load (no ``A[row_index]`` intermediate) — see
+        ``sketch_apply_indexed``.
 
     Returns:
       ``(k, n)`` fp32 array, ``k = plan.k`` (the padded-up sketch dim).
       Differentiable in A: the VJP is ``sketch_apply_t`` (``Sᵀ dY``) at the
-      same impl/tn/dtype.
+      same impl/tn/dtype (scattered back into the masked rows when
+      ``row_index`` is given).
     """
-    return _sketch_apply_impl(plan, A, impl, tn, dtype)
+    if row_index is None:
+        return _sketch_apply_vjp(plan, A, impl, tn, dtype)
+    return sketch_apply_indexed(plan, A, row_index, impl, tn, dtype)
 
 
 def _sketch_apply_impl(plan, A, impl, tn, dtype):
@@ -150,12 +180,26 @@ def _sketch_apply_impl(plan, A, impl, tn, dtype):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3, 4))
+def _sketch_apply_t_vjp(
+    plan: BlockPermPlan,
+    Y: jnp.ndarray,
+    impl: Impl = "auto",
+    tn: Optional[int] = None,
+    dtype: Optional[str] = None,
+):
+    """custom_vjp core of ``sketch_apply_t`` (VJP is ``S dX``)."""
+    return _sketch_apply_t_impl(plan, Y, impl, tn, dtype)
+
+
 def sketch_apply_t(
     plan: BlockPermPlan,
     Y: jnp.ndarray,
     impl: Impl = "auto",
     tn: Optional[int] = None,
     dtype: Optional[str] = None,
+    *,
+    row_index: Optional[jnp.ndarray] = None,
+    d_src: Optional[int] = None,
 ):
     """Apply the transposed sketch: ``X = Sᵀ Y`` (the un-sketch / VJP map).
 
@@ -168,12 +212,23 @@ def sketch_apply_t(
         ``"auto" | "pallas" | "pallas_v1" | "xla"``.
       tn / dtype: as in ``sketch_apply`` (``dtype`` rounds the Y stream to
         bf16 when ``"bfloat16"``; accumulation stays fp32).
+      row_index / d_src: the dual of the gather path — when given, the
+        compact ``(plan.d, n)`` result is scattered into rows ``row_index``
+        of a zero ``(d_src, n)`` array (the un-sketch of a gather-fused
+        sketch lands back at the masked coordinates).
 
     Returns:
-      ``(d, n)`` fp32 array (logical d, padding stripped).  Differentiable
-      in Y; the VJP is ``sketch_apply``.
+      ``(d, n)`` fp32 array (logical d, padding stripped) — or ``(d_src,
+      n)`` with the scatter.  Differentiable in Y; the VJP is
+      ``sketch_apply``.
     """
-    return _sketch_apply_t_impl(plan, Y, impl, tn, dtype)
+    X = _sketch_apply_t_vjp(plan, Y, impl, tn, dtype)
+    if row_index is None:
+        return X
+    if d_src is None:
+        raise ValueError("row_index requires d_src (the scatter target dim)")
+    out = jnp.zeros((d_src, X.shape[1]), X.dtype)
+    return out.at[jnp.asarray(row_index, jnp.int32)].add(X)
 
 
 def _sketch_apply_t_impl(plan, Y, impl, tn, dtype):
@@ -211,8 +266,126 @@ def _apply_t_bwd(plan, impl, tn, dtype, _res, dX):
     return (_sketch_apply_impl(plan, dX, impl, tn, dtype),)
 
 
-sketch_apply.defvjp(_apply_fwd, _apply_bwd)
-sketch_apply_t.defvjp(_apply_t_fwd, _apply_t_bwd)
+_sketch_apply_vjp.defvjp(_apply_fwd, _apply_bwd)
+_sketch_apply_t_vjp.defvjp(_apply_t_fwd, _apply_t_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Gather-fused apply: Y = S @ A[row_index, :] in one launch.
+# ---------------------------------------------------------------------------
+
+def _row_map_for(plan: BlockPermPlan, row_index: jnp.ndarray) -> jnp.ndarray:
+    """(d_pad,) int32 source-row map.  Padding entries point at row 0 — a
+    placeholder valid source; the gather kernel zeroes the corresponding
+    scratch rows itself (rows ≥ ``plan.d``), so A is never copied just to
+    host a zero row and padding still contributes exact zeros."""
+    ri = jnp.asarray(row_index, jnp.int32).reshape(-1)
+    pad = plan.d_pad - ri.shape[0]
+    if pad == 0:
+        return ri
+    return jnp.concatenate([ri, jnp.zeros((pad,), jnp.int32)])
+
+
+def _apply_gather_path(plan, A, row_index, impl, tn, dtype, *, variant,
+                       gather_kernel, oracle, materialized_apply):
+    """Shared gather dispatch for the ``row_index=`` forward paths.
+
+    One copy of the protocol — mask-length check, xla oracle, the
+    materializing fallback (v1 / VMEM overflow), tile resolution, column
+    padding, zero-row append, row-map construction, output slice — so the
+    fwd and blockrow gather entries cannot silently diverge.
+
+    Args:
+      variant: tuner/VMEM shape-class name (``"fwd_gather"`` /
+        ``"blockrow_gather"``).
+      gather_kernel: ``fsk.*_pallas_gather(plan, Az, rmap, tn=)``.
+      oracle: pure-jnp reference taking the materialized gather.
+      materialized_apply: fallback on ``A[row_index]`` when no fused
+        gather kernel applies (``pallas_v1``, or the Φ scratch overflows
+        VMEM at the smallest tile).
+    """
+    plan = _resolve_plan(plan, dtype)
+    impl = _resolve_impl(impl)
+    d_keep = row_index.shape[0]
+    if d_keep != plan.d:
+        raise ValueError(
+            f"row_index has {d_keep} entries but plan.d == {plan.d}; build "
+            f"the plan for the masked dim (make_plan(d_keep, k, ...))")
+    if impl == "xla":
+        return oracle(plan, _emulate_stream(plan, A[row_index]))
+    assert impl in _PALLAS_IMPLS, impl
+    n = A.shape[1]
+    if impl == "pallas_v1" or not tune.fused_fits_vmem(plan, n, variant):
+        return materialized_apply(A[row_index], impl)
+    if tn is None:
+        tn = tune.resolve_tn(plan, n, variant)
+    Ap, n = _pad_cols(A, tn)
+    rmap = _row_map_for(plan, row_index)
+    Y = gather_kernel(plan, Ap, rmap, tn=tn)
+    return Y[: plan.k, :n]
+
+
+def _sketch_apply_indexed_impl(plan, A, row_index, impl, tn, dtype):
+    return _apply_gather_path(
+        plan, A, row_index, impl, tn, dtype,
+        variant="fwd_gather",
+        gather_kernel=fsk.flashsketch_pallas_gather,
+        oracle=kref.flashsketch_ref,
+        materialized_apply=lambda Am, im: _sketch_apply_impl(
+            plan, Am, im, tn, dtype),
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 3, 4, 5))
+def sketch_apply_indexed(
+    plan: BlockPermPlan,
+    A: jnp.ndarray,
+    row_index: jnp.ndarray,
+    impl: Impl = "auto",
+    tn: Optional[int] = None,
+    dtype: Optional[str] = None,
+):
+    """Gather-fused sketch: ``Y = S @ A[row_index, :]`` in ONE launch.
+
+    The sparsify→sketch fusion of the GraSS pipeline: the kernel keeps
+    ``A`` in HBM and DMAs only the ``row_index`` rows into its gather
+    scratch — no ``A[row_index]`` intermediate is ever written, which
+    removes one full read+write of the sparsified matrix per application
+    and (batched) turns B per-example gathers into tile-wide streams.
+
+    Args:
+      plan: frozen plan for the MASKED dim — ``plan.d`` must equal
+        ``len(row_index)``.
+      A: ``(d_src, n)`` float array, ``d_src >= 1``; only the indexed rows
+        are read (streamed in the effective dtype, see ``dtype``).
+      row_index: ``(plan.d,)`` int array of row indices into ``A``.
+        Treated as non-differentiable (integer) data.
+      impl / tn / dtype: as in ``sketch_apply``.  ``"xla"`` runs the
+        materializing oracle ``flashsketch_ref(plan, A[row_index])``;
+        ``"pallas_v1"`` (and the VMEM fallback) materialize the gather and
+        use the regular kernels.
+
+    Returns:
+      ``(k, n)`` fp32 array.  Differentiable in ``A``: the VJP scatters
+      ``Sᵀ dY`` into rows ``row_index`` of a zero ``(d_src, n)`` cotangent.
+    """
+    return _sketch_apply_indexed_impl(plan, A, row_index, impl, tn, dtype)
+
+
+def _indexed_fwd(plan, A, row_index, impl, tn, dtype):
+    out = _sketch_apply_indexed_impl(plan, A, row_index, impl, tn, dtype)
+    return out, (row_index, A.shape[0])
+
+
+def _indexed_bwd(plan, impl, tn, dtype, res, dY):
+    row_index, d_src = res
+    # the scatter dual is single-sourced in sketch_apply_t(row_index=)
+    dA = sketch_apply_t(plan, dY, impl, tn, dtype,
+                        row_index=row_index, d_src=d_src)
+    return dA, None
+
+
+sketch_apply_indexed.defvjp(_indexed_fwd, _indexed_bwd)
 
 
 def blockrow_apply(
@@ -221,6 +394,8 @@ def blockrow_apply(
     impl: Impl = "auto",
     tn: Optional[int] = None,
     dtype: Optional[str] = None,
+    *,
+    row_index: Optional[jnp.ndarray] = None,
 ):
     """FLASHBLOCKROW forward: ``Y = S_blockrow A`` (paper App. C).
 
@@ -231,15 +406,27 @@ def blockrow_apply(
 
     Args:
       plan: frozen ``BlockPermPlan`` (wiring drawn iid per plan seed).
-      A: ``(d, n)`` float array.
+      A: ``(d, n)`` float array (``(d_src, n)`` with ``row_index``).
       impl: ``"auto" | "pallas" | "pallas_v1" | "xla"`` — same dispatch
         rules as ``sketch_apply``.
       tn / dtype: as in ``sketch_apply`` (bf16 streams A at half the HBM
         traffic, fp32 accumulate).
+      row_index: optional ``(plan.d,)`` int rows; computes
+        ``S_blockrow @ A[row_index, :]`` with the gather fused in-kernel
+        (same contract as ``sketch_apply_indexed``).
 
     Returns:
       ``(k, n)`` fp32 array.
     """
+    if row_index is not None:
+        return _apply_gather_path(
+            plan, A, row_index, impl, tn, dtype,
+            variant="blockrow_gather",
+            gather_kernel=fsk.blockrow_pallas_gather,
+            oracle=kref.blockrow_ref,
+            materialized_apply=lambda Am, im: blockrow_apply(
+                plan, Am, im, tn, dtype),
+        )
     plan = _resolve_plan(plan, dtype)
     impl = _resolve_impl(impl)
     if impl == "xla":
@@ -256,21 +443,27 @@ def blockrow_apply(
     return Y[: plan.k, :n]
 
 
-def sketch_vectors(plan: BlockPermPlan, x: jnp.ndarray, impl: Impl = "auto"):
+def sketch_vectors(plan: BlockPermPlan, x: jnp.ndarray, impl: Impl = "auto",
+                   *, row_index: Optional[jnp.ndarray] = None):
     """Sketch a batch of vectors laid out along the LAST axis.
 
     Args:
       plan: the frozen sketch draw (``core.blockperm.make_plan``).
-      x: ``(..., d)`` float array; leading axes are an arbitrary batch.
+      x: ``(..., d)`` float array; leading axes are an arbitrary batch
+        (``(..., d_src)`` with ``row_index`` — e.g. a stack of raw
+        per-example gradients whose sparsification is fused into the
+        sketch).
       impl: one of ``"auto" | "pallas" | "pallas_v1" | "xla"`` (see
         ``sketch_apply``).
+      row_index: optional ``(plan.d,)`` int rows — fused
+        ``S x[..., row_index]`` (the GraSS sparsify→sketch fusion).
 
     Returns:
       ``(..., k)`` array, ``y[..., :] = S x[..., :]``.  Internally the batch
       is flattened into the column axis of one ``sketch_apply`` launch.
     """
     flat = x.reshape(-1, x.shape[-1])                 # (n, d)
-    Y = sketch_apply(plan, flat.T, impl)              # (k, n)
+    Y = sketch_apply(plan, flat.T, impl, row_index=row_index)   # (k, n)
     return Y.T.reshape(*x.shape[:-1], plan.k)
 
 
@@ -280,6 +473,8 @@ def sketch_apply_batched(
     impl: Impl = "auto",
     tn: Optional[int] = None,
     dtype: Optional[str] = None,
+    *,
+    row_index: Optional[jnp.ndarray] = None,
 ):
     """Apply S to a stack of matrices in ONE kernel launch.
 
@@ -289,21 +484,40 @@ def sketch_apply_batched(
         sketch.  The batch axes are folded into the column axis (``S`` acts
         on the row axis only), so a ``(B, d, n)`` stack costs one launch on
         a ``(d, B·n)`` operand instead of ``B`` launches (or a vmap, which
-        would re-trace the Pallas kernel per batch layout).
+        would re-trace the Pallas kernel per batch layout).  The cached Φ
+        scratch is built once per launch and reused across the whole batch.
       impl / tn / dtype: forwarded to ``sketch_apply`` (same valid values).
+        ``tn=None`` resolves against the autotuner's *batched* shape class
+        (``tune.resolve_tn(..., batch=B)``), not the per-matrix width.
+      row_index: optional ``(plan.d,)`` int rows shared by every batch
+        element — fused ``S @ A[b][row_index, :]`` per element, still one
+        launch (the GraSS per-example-gradient path).
 
     Returns:
       ``(..., k, n)`` array with ``out[b] = S @ A[b]`` for every batch
-      index ``b``.  Differentiable in ``A`` (inherits ``sketch_apply``'s
-      custom VJP).
+      index ``b``.  Differentiable in ``A`` (inherits the custom VJP of
+      ``sketch_apply`` / ``sketch_apply_indexed``).
     """
     if A.ndim < 2:
         raise ValueError(f"A must be at least 2-D (d, n), got shape {A.shape}")
     batch = A.shape[:-2]
     d, n = A.shape[-2:]
+    n_batch = 1
+    for b in batch:
+        n_batch *= b
+    if tn is None:
+        # Resolve against the BATCHED shape class — but only when the launch
+        # will actually be the fused v2 kernel; v1 dispatch (explicit or the
+        # VMEM-overflow downgrade) must keep tn=None so the downstream
+        # _resolve_tn applies v1_default_tn, not the v2 heuristic.
+        eff_plan = _resolve_plan(plan, dtype)
+        variant = "fwd" if row_index is None else "fwd_gather"
+        if (_resolve_impl(impl) == "pallas"
+                and tune.fused_fits_vmem(eff_plan, n * n_batch, variant)):
+            tn = tune.resolve_tn(eff_plan, n, variant, batch=n_batch)
     flat = jnp.moveaxis(A.reshape((-1, d, n)), 0, 1).reshape(d, -1)  # (d, B·n)
-    Y = sketch_apply(plan, flat, impl, tn, dtype)                    # (k, B·n)
-    Y = jnp.moveaxis(Y.reshape(plan.k, -1, n), 1, 0)
+    Y = sketch_apply(plan, flat, impl, tn, dtype, row_index=row_index)
+    Y = jnp.moveaxis(Y.reshape(plan.k, -1, n), 1, 0)                 # (k, B·n)
     return Y.reshape(*batch, plan.k, n)
 
 

@@ -33,12 +33,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blockperm import (MIN_TILE_N, SKETCH_VARIANTS, BlockPermPlan,
+from repro.core.blockperm import (GATHER_VARIANTS, MIN_TILE_N,
+                                  SKETCH_VARIANTS, BlockPermPlan,
                                   VMEM_BUDGET_BYTES, _next_pow2,
                                   fused_variant_bytes, make_plan)
 from repro.kernels import flashsketch as fsk
 
-VARIANTS = SKETCH_VARIANTS
+VARIANTS = SKETCH_VARIANTS + GATHER_VARIANTS
 
 _MIN_TN = MIN_TILE_N
 _MAX_TN = 1024
@@ -79,9 +80,16 @@ def _backend_tag(interpret: Optional[bool] = None) -> str:
 
 
 def cache_key(plan: BlockPermPlan, n: int, variant: str,
-              interpret: Optional[bool] = None) -> Tuple:
+              interpret: Optional[bool] = None, *, batch: int = 1) -> Tuple:
+    """Shape-class key.  Beyond the PR-1 fields it carries the gather/batch
+    dims of the fused-batched path: whether the kernel does an in-kernel
+    row gather (``*_gather`` variants tile differently — no pipelined input
+    blocks, one DMA'd gather scratch) and the bucketed batch count folded
+    into the column axis (a B-example batched launch has B·n effective
+    columns, which moves the tile-width sweet spot)."""
     return (_backend_tag(interpret), variant, plan.d_pad, plan.k_pad, plan.M,
-            plan.Br, plan.kappa, plan.s, _n_bucket(n), plan.dtype)
+            plan.Br, plan.kappa, plan.s, _n_bucket(n), plan.dtype,
+            variant in GATHER_VARIANTS, _n_bucket(batch))
 
 
 def clear_cache() -> None:
@@ -108,26 +116,29 @@ def fused_fits_vmem(plan: BlockPermPlan, n: int, variant: str = "fwd") -> bool:
     return _vmem_footprint(plan, _MIN_TN, variant) <= VMEM_BUDGET_BYTES
 
 
-def heuristic_tn(plan: BlockPermPlan, n: int, variant: str = "fwd") -> int:
+def heuristic_tn(plan: BlockPermPlan, n: int, variant: str = "fwd",
+                 batch: int = 1) -> int:
     """Largest power-of-two tile width that fits the VMEM budget.
 
     Prefers ≥128 (TPU lane width) when the problem is wide enough; never
-    exceeds the (power-of-two-rounded) column count, so small problems are
-    not padded into oblivion.
+    exceeds the (power-of-two-rounded) effective column count ``n·batch``
+    (a batched launch folds the batch into the column axis), so small
+    problems are not padded into oblivion.
     """
-    cap = min(_MAX_TN, _n_bucket(n))
+    cap = min(_MAX_TN, _n_bucket(n * max(1, batch)))
     tn = max(_MIN_TN, cap)
     while tn > _MIN_TN and _vmem_footprint(plan, tn, variant) > VMEM_BUDGET_BYTES:
         tn //= 2
     return tn
 
 
-def resolve_tn(plan: BlockPermPlan, n: int, variant: str = "fwd") -> int:
+def resolve_tn(plan: BlockPermPlan, n: int, variant: str = "fwd",
+               batch: int = 1) -> int:
     """Cache-or-heuristic tile width (the ``ops`` dispatch path, no timing)."""
-    hit = _CACHE.get(cache_key(plan, n, variant))
+    hit = _CACHE.get(cache_key(plan, n, variant, batch=batch))
     if hit is not None:
         return hit.tn
-    return heuristic_tn(plan, n, variant)
+    return heuristic_tn(plan, n, variant, batch)
 
 
 def v1_default_tn(plan: BlockPermPlan, n: int) -> int:
@@ -149,15 +160,28 @@ def v1_default_tn(plan: BlockPermPlan, n: int) -> int:
 # Active tuning
 # ---------------------------------------------------------------------------
 
+def _with_identity_row_map(kernel):
+    """Adapt a gather kernel to the (plan, X, tn, interpret) timing shape:
+    tuning uses the identity row map (the gather cost is index-independent;
+    only the DMA count and tile shapes matter)."""
+    def run(plan, X, *, tn, interpret=None):
+        rmap = jnp.arange(plan.d_pad, dtype=jnp.int32)
+        return kernel(plan, X, rmap, tn=tn, interpret=interpret)
+    return run
+
+
 _KERNELS = {
     "fwd": fsk.flashsketch_pallas,
     "transpose": fsk.flashsketch_transpose_pallas,
     "blockrow": fsk.blockrow_pallas,
+    "fwd_gather": _with_identity_row_map(fsk.flashsketch_pallas_gather),
+    "blockrow_gather": _with_identity_row_map(fsk.blockrow_pallas_gather),
 }
 
 
-def _candidate_tns(plan: BlockPermPlan, n: int, variant: str) -> Tuple[int, ...]:
-    cap = min(_MAX_TN, _n_bucket(n))
+def _candidate_tns(plan: BlockPermPlan, n: int, variant: str,
+                   batch: int = 1) -> Tuple[int, ...]:
+    cap = min(_MAX_TN, _n_bucket(n * max(1, batch)))
     tns = []
     tn = _MIN_TN
     while tn <= cap:
@@ -191,23 +215,30 @@ def autotune(
     n: int,
     variant: str = "fwd",
     *,
+    batch: int = 1,
     tns: Optional[Sequence[int]] = None,
     warmup: int = 1,
     iters: int = 3,
     interpret: Optional[bool] = None,
 ) -> TuneResult:
-    """Time the v2 kernel over a ``tn`` sweep and cache the winner."""
+    """Time the v2 kernel over a ``tn`` sweep and cache the winner.
+
+    ``batch`` is the batched-apply fold factor: a B-stack sketched in one
+    launch runs on ``B·n`` effective columns, so it is timed (and keyed)
+    that way rather than at the per-matrix width.
+    """
     if variant not in VARIANTS:
         raise ValueError(f"variant must be one of {VARIANTS}, got {variant!r}")
-    key = cache_key(plan, n, variant, interpret)
+    key = cache_key(plan, n, variant, interpret, batch=batch)
     hit = _CACHE.get(key)
     if hit is not None and hit.source in ("tuned", "loaded"):
         return hit
     kernel = _KERNELS[variant]
+    n_eff = n * max(1, batch)
     best: Optional[TuneResult] = None
     last_error: Optional[Exception] = None
-    for tn in (tns or _candidate_tns(plan, n, variant)):
-        n_pad = ((n + tn - 1) // tn) * tn
+    for tn in (tns or _candidate_tns(plan, n, variant, batch)):
+        n_pad = ((n_eff + tn - 1) // tn) * tn
         operand = _make_operand(plan, n_pad, variant)
         fn = jax.jit(lambda x, _tn=tn: kernel(plan, x, tn=_tn, interpret=interpret))
         try:
@@ -224,7 +255,8 @@ def autotune(
             f"autotune: all tn candidates failed for {plan.describe()} "
             f"variant={variant!r}; falling back to heuristic "
             f"(last error: {last_error!r})")
-        best = TuneResult(tn=heuristic_tn(plan, n, variant), source="heuristic")
+        best = TuneResult(tn=heuristic_tn(plan, n, variant, batch),
+                          source="heuristic")
     _CACHE[key] = best
     return best
 

@@ -11,3 +11,12 @@ HBM_PER_CHIP = 16 * 2**30       # 16 GiB
 # v5e 2D torus: 4 ICI links per chip usable; conservative single-link model
 # per the assignment formula (collective_bytes / (chips × link_bw)).
 ICI_LINKS = 1
+
+# Minimum useful HBM transaction: a gathered (non-contiguous) row shorter
+# than this still pays for the full transaction — the term that makes
+# per-example (n = 1) gathers so expensive and batched gathers cheap.
+HBM_TRANSACTION_BYTES = 512.0
+
+# Per-kernel-launch dispatch/teardown overhead (host + XLA + DMA warmup);
+# the term that makes B single-example launches lose to one batched launch.
+KERNEL_LAUNCH_US = 5.0

@@ -77,17 +77,34 @@ def kernel_cost(
     version: str = "v2",
     variant: str = "fwd",
     tn: int = 128,
+    gather: bool = False,
+    batch: int = 1,
 ) -> KernelCost:
+    """Single-launch cost terms.
+
+    ``batch`` folds a B-stack into the column axis (the batched apply):
+    every term scales with ``n·batch`` but the Φ build cost stays per-launch
+    — the cached Φ tile is reused across the whole batch.
+
+    ``gather`` models the gather-fused load (``fwd``/``blockrow`` only):
+    each of the κ·d_pad gathered rows is a non-contiguous HBM read of
+    ``tn·itemsize`` bytes per column tile, charged at transaction
+    granularity (``hw.HBM_TRANSACTION_BYTES`` floor) — wide tiles amortize
+    the transaction, skinny per-example launches eat it whole.
+    """
     if version not in ("v1", "v2"):
         raise ValueError(f"version must be 'v1' or 'v2', got {version!r}")
     if variant not in VARIANTS:
         raise ValueError(f"variant must be one of {VARIANTS}, got {variant!r}")
+    if gather and variant == "transpose":
+        raise ValueError("gather-fused loads exist for fwd/blockrow only")
     p = plan
     # v1 predates the mixed-precision path: always streams fp32.
     in_itemsize = p.stream_itemsize if version == "v2" else 4
-    n_tiles = max(1, (n + tn - 1) // tn)
+    n_eff = n * max(1, batch)
+    n_tiles = max(1, (n_eff + tn - 1) // tn)
 
-    mxu = 2.0 * p.kappa * p.Br * p.d_pad * n
+    mxu = 2.0 * p.kappa * p.Br * p.d_pad * n_eff
 
     # Φ tile build: s hash passes over the hashed axis (Bc words for the
     # column-pattern kernels, Br for blockrow's per-row pattern).
@@ -97,13 +114,19 @@ def kernel_cost(
     vpu = per_tile * tile_builds
 
     if variant == "transpose":
-        in_elems = p.kappa * p.k_pad * n      # Y gathered κ× via inverse maps
-        out_elems = p.d_pad * n
+        in_elems = p.kappa * p.k_pad * n_eff  # Y gathered κ× via inverse maps
+        out_elems = p.d_pad * n_eff
     else:
-        in_elems = p.kappa * p.d_pad * n      # A streamed κ×
-        out_elems = p.k_pad * n
+        in_elems = p.kappa * p.d_pad * n_eff  # A streamed κ×
+        out_elems = p.k_pad * n_eff
     out_accesses = (2 * p.kappa - 1) * out_elems if version == "v1" else out_elems
-    hbm = in_itemsize * in_elems + 4.0 * out_accesses
+    if gather:
+        # κ·d_pad row reads per column tile, each at transaction granularity
+        row_bytes = max(float(tn * in_itemsize), hw.HBM_TRANSACTION_BYTES)
+        in_bytes = p.kappa * p.d_pad * n_tiles * row_bytes
+    else:
+        in_bytes = in_itemsize * in_elems
+    hbm = in_bytes + 4.0 * out_accesses
 
     peak = hw.PEAK_FLOPS_BF16 if in_itemsize == 2 else hw.PEAK_FLOPS_FP32
     return KernelCost(mxu_flops=mxu, vpu_flops=vpu, hbm_bytes=hbm,
@@ -121,3 +144,50 @@ def modeled_speedup(
     v1 = kernel_cost(plan, n, version="v1", variant=variant, tn=tn)
     v2 = kernel_cost(plan, n, version="v2", variant=variant, tn=tn)
     return v1.modeled_us / v2.modeled_us
+
+
+def grass_sketch_cost(
+    plan: BlockPermPlan,
+    batch: int,
+    *,
+    fused: bool = True,
+    batched: bool = True,
+    version: str = "v2",
+    tn: int = 128,
+    variant: str = "fwd",
+) -> float:
+    """Modeled us to sketch ``batch`` sparsified per-example gradients.
+
+    The GraSS inner loop (sparsify → sketch, §7.4/App. E), in its four
+    organizations:
+
+      * ``fused & batched`` — ONE gather-fused launch over the whole batch
+        folded into the column axis (the PR-3 path).
+      * ``fused, not batched`` — B gather-fused single-column launches.
+      * ``not fused, batched`` — a gather pass materializes ``A[mask]``
+        (transaction-granular read + contiguous write), then one batched
+        sketch launch re-reads it κ×.
+      * ``not fused, not batched`` — the seed pipeline: per example, a
+        materializing gather + a skinny (n = 1) sketch launch.  Every
+        gathered element pays a full HBM transaction and every example
+        pays two kernel launches.
+
+    ``plan.d`` is the sparsified dim d_keep; the source dim only enters
+    through the transaction-granular gather term (index-independent).
+    """
+    if fused:
+        eff_tn = min(tn, max(1, batch)) if batched else 1
+        kc = kernel_cost(plan, 1, version=version, variant=variant,
+                         tn=max(8, eff_tn), gather=True,
+                         batch=batch if batched else 1)
+        if batched:
+            return kc.modeled_us + hw.KERNEL_LAUNCH_US
+        return batch * (kc.modeled_us + hw.KERNEL_LAUNCH_US)
+    # unfused: materialize A[mask] first, then run the regular kernel on it
+    cols = batch if batched else 1
+    row_read = max(4.0 * cols, hw.HBM_TRANSACTION_BYTES)   # per gathered row
+    gather_us = 1e6 * (plan.d * row_read + 4.0 * plan.d * cols) / hw.HBM_BW
+    kc = kernel_cost(plan, 1, version=version, variant=variant,
+                     tn=max(8, min(tn, cols)), batch=cols)
+    per_pass = gather_us + kc.modeled_us + 2 * hw.KERNEL_LAUNCH_US
+    return per_pass if batched else batch * per_pass

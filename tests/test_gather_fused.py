@@ -1,0 +1,221 @@
+"""Gather-fused batched FlashSketch tests (PR-3 acceptance set).
+
+Covers: bit-exactness of the fused ``S @ A[mask, :]`` kernel against
+gather-then-``pallas`` on every gatherable variant and both streaming
+dtypes, the XLA oracle equivalence, the scatter VJP, batched apply vs a
+per-example loop, and the autotuner's new gather+batch cache-key dims.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.blockperm import GATHER_VARIANTS, make_plan
+from repro.kernels import ops, ref as kref, tune
+
+SWEEP = [
+    # (d_src, d_keep, k, kappa, s, block_rows, n)
+    (700, 256, 64, 1, 1, 8, 16),
+    (800, 256, 64, 2, 2, 8, 33),
+    (900, 300, 96, 3, 2, 16, 37),
+    (2000, 512, 128, 4, 4, 32, 64),
+]
+
+
+def _mask(rng, d_src, d_keep):
+    return jnp.asarray(np.sort(rng.choice(d_src, d_keep, replace=False)),
+                       jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fused gather: bit-exact vs the unfused v2 kernel, on all variants/dtypes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [None, "bfloat16"])
+@pytest.mark.parametrize("d_src,d_keep,k,kappa,s,br,n", SWEEP)
+def test_fused_gather_bit_exact_fwd(d_src, d_keep, k, kappa, s, br, n,
+                                    dtype, rng):
+    plan = make_plan(d_keep, k, kappa=kappa, s=s, block_rows=br, seed=d_src)
+    A = jnp.asarray(rng.normal(size=(d_src, n)), jnp.float32)
+    idx = _mask(rng, d_src, d_keep)
+    fused = ops.sketch_apply(plan, A, "pallas", 16, dtype, row_index=idx)
+    ref = ops.sketch_apply(plan, A[idx], "pallas", 16, dtype)
+    # same contraction, same operand values => bitwise equal, not just close
+    assert np.array_equal(np.asarray(fused), np.asarray(ref))
+
+
+@pytest.mark.parametrize("dtype", [None, "bfloat16"])
+@pytest.mark.parametrize("d_src,d_keep,k,kappa,s,br,n", SWEEP[:3])
+def test_fused_gather_bit_exact_blockrow(d_src, d_keep, k, kappa, s, br, n,
+                                         dtype, rng):
+    plan = make_plan(d_keep, k, kappa=kappa, s=s, block_rows=br, seed=d_src)
+    A = jnp.asarray(rng.normal(size=(d_src, n)), jnp.float32)
+    idx = _mask(rng, d_src, d_keep)
+    fused = ops.blockrow_apply(plan, A, "pallas", 16, dtype, row_index=idx)
+    ref = ops.blockrow_apply(plan, A[idx], "pallas", 16, dtype)
+    assert np.array_equal(np.asarray(fused), np.asarray(ref))
+
+
+def test_fused_gather_matches_xla_oracle(rng):
+    plan = make_plan(300, 96, kappa=3, s=2, block_rows=16, seed=9)
+    A = jnp.asarray(rng.normal(size=(1100, 40)), jnp.float32)
+    idx = _mask(rng, 1100, 300)
+    np.testing.assert_allclose(
+        np.asarray(ops.sketch_apply(plan, A, "pallas", 8, row_index=idx)),
+        np.asarray(kref.flashsketch_ref(plan, A[idx])),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+def test_fused_gather_identity_mask_equals_plain(rng):
+    """A full-range mask must reproduce the non-gather kernel exactly."""
+    plan = make_plan(256, 64, kappa=2, s=2, block_rows=8, seed=4)
+    A = jnp.asarray(rng.normal(size=(256, 24)), jnp.float32)
+    idx = jnp.arange(256, dtype=jnp.int32)
+    fused = ops.sketch_apply(plan, A, "pallas", 8, row_index=idx)
+    plain = ops.sketch_apply(plan, A, "pallas", 8)
+    assert np.array_equal(np.asarray(fused), np.asarray(plain))
+
+
+def test_fused_gather_wrong_mask_len_raises(rng):
+    plan = make_plan(256, 64, kappa=2, s=2, block_rows=8, seed=4)
+    A = jnp.asarray(rng.normal(size=(500, 8)), jnp.float32)
+    with pytest.raises(ValueError, match="plan.d"):
+        ops.sketch_apply(plan, A, "pallas", 8,
+                         row_index=jnp.arange(100, dtype=jnp.int32))
+
+
+def test_fused_gather_v1_and_xla_fallbacks(rng):
+    """pallas_v1 has no gather formulation: it must materialize and agree."""
+    plan = make_plan(300, 96, kappa=3, s=2, block_rows=16, seed=2)
+    A = jnp.asarray(rng.normal(size=(700, 16)), jnp.float32)
+    idx = _mask(rng, 700, 300)
+    v1 = ops.sketch_apply(plan, A, "pallas_v1", 8, row_index=idx)
+    xla = ops.sketch_apply(plan, A, "xla", row_index=idx)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(xla),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Differentiation: VJP of the fused gather is the scattered un-sketch
+# ---------------------------------------------------------------------------
+
+def test_fused_gather_vjp_is_scattered_transpose(rng):
+    plan = make_plan(300, 96, kappa=3, s=2, block_rows=16, seed=5)
+    A = jnp.asarray(rng.normal(size=(900, 24)), jnp.float32)
+    idx = _mask(rng, 900, 300)
+    W = jnp.asarray(rng.normal(size=(plan.k, 24)), jnp.float32)
+
+    g_fused = jax.grad(lambda A_: jnp.sum(
+        W * ops.sketch_apply(plan, A_, "pallas", 8, row_index=idx)))(A)
+    g_ref = jax.grad(lambda A_: jnp.sum(
+        W * ops.sketch_apply(plan, A_[idx], "xla")))(A)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_ref),
+                               atol=1e-5, rtol=1e-5)
+    # rows off the mask receive exactly zero cotangent
+    off = np.setdiff1d(np.arange(900), np.asarray(idx))
+    assert np.all(np.asarray(g_fused)[off] == 0.0)
+
+
+def test_sketch_apply_t_scatter_dual(rng):
+    plan = make_plan(256, 64, kappa=2, s=2, block_rows=8, seed=6)
+    Y = jnp.asarray(rng.normal(size=(plan.k, 12)), jnp.float32)
+    idx = _mask(rng, 600, 256)
+    X = ops.sketch_apply_t(plan, Y, "xla", row_index=idx, d_src=600)
+    Xc = ops.sketch_apply_t(plan, Y, "xla")
+    assert X.shape == (600, 12)
+    np.testing.assert_allclose(np.asarray(X[idx]), np.asarray(Xc),
+                               atol=1e-6, rtol=1e-6)
+    with pytest.raises(ValueError, match="d_src"):
+        ops.sketch_apply_t(plan, Y, "xla", row_index=idx)
+
+
+# ---------------------------------------------------------------------------
+# Batched apply: one launch == per-example loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["xla", "pallas", "pallas_v1"])
+def test_batched_equals_per_example_loop(impl, rng):
+    plan = make_plan(300, 96, kappa=3, s=2, block_rows=16, seed=7)
+    G = jnp.asarray(rng.normal(size=(5, 900, 8)), jnp.float32)
+    idx = _mask(rng, 900, 300)
+    Yb = ops.sketch_apply_batched(plan, G, impl, row_index=idx)
+    Yl = jnp.stack([
+        ops.sketch_apply(plan, G[b], impl, row_index=idx)
+        for b in range(G.shape[0])
+    ])
+    assert Yb.shape == (5, plan.k, 8)
+    np.testing.assert_allclose(np.asarray(Yb), np.asarray(Yl),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_batched_without_gather_unchanged(rng):
+    plan = make_plan(256, 64, kappa=2, s=2, block_rows=8, seed=8)
+    G = jnp.asarray(rng.normal(size=(3, 256, 8)), jnp.float32)
+    Yb = ops.sketch_apply_batched(plan, G, "pallas")
+    Yl = jnp.stack([ops.sketch_apply(plan, G[b], "pallas")
+                    for b in range(3)])
+    np.testing.assert_allclose(np.asarray(Yb), np.asarray(Yl),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sketch_vectors_gather(rng):
+    plan = make_plan(300, 96, kappa=2, s=2, block_rows=16, seed=3)
+    x = jnp.asarray(rng.normal(size=(6, 900)), jnp.float32)
+    idx = _mask(rng, 900, 300)
+    y = ops.sketch_vectors(plan, x, "xla", row_index=idx)
+    want = ops.sketch_vectors(plan, x[:, np.asarray(idx)], "xla")
+    assert y.shape == (6, plan.k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner: gather+batch cache-key dims
+# ---------------------------------------------------------------------------
+
+def test_cache_key_gains_gather_and_batch_dims():
+    plan = make_plan(512, 128, kappa=4, s=2, block_rows=32, seed=1)
+    k_plain = tune.cache_key(plan, 64, "fwd")
+    k_gather = tune.cache_key(plan, 64, "fwd_gather")
+    k_batched = tune.cache_key(plan, 64, "fwd", batch=32)
+    assert len({k_plain, k_gather, k_batched}) == 3
+    # the gather flag is an explicit key field, not just the variant name
+    assert k_gather[-2] is True and k_plain[-2] is False
+    # batch buckets like n: 32 and 33 round to different powers of two
+    assert tune.cache_key(plan, 64, "fwd", batch=17) == \
+        tune.cache_key(plan, 64, "fwd", batch=32)
+    assert tune.cache_key(plan, 64, "fwd", batch=33) != \
+        tune.cache_key(plan, 64, "fwd", batch=32)
+
+
+def test_gather_variants_registered():
+    for v in GATHER_VARIANTS:
+        assert v in tune.VARIANTS
+        assert v in tune._KERNELS
+
+
+def test_tune_cache_roundtrips_gather_batch_fields(tmp_path):
+    tune.clear_cache()
+    plan = make_plan(256, 64, kappa=2, s=2, block_rows=8, seed=2)
+    res = tune.autotune(plan, 4, "fwd_gather", batch=8, iters=1, warmup=0)
+    assert res.source == "tuned"
+    assert tune.resolve_tn(plan, 4, "fwd_gather", batch=8) == res.tn
+    path = tmp_path / "tune_gather.json"
+    n_saved = tune.save_cache(str(path))
+    tune.clear_cache()
+    assert tune.load_cache(str(path)) == n_saved
+    # the loaded winner is served for the SAME (gather, batch) class only
+    assert tune.resolve_tn(plan, 4, "fwd_gather", batch=8) == res.tn
+    assert tune.autotune(plan, 4, "fwd_gather", batch=8,
+                         iters=1, warmup=0).source == "loaded"
+    tune.clear_cache()
+
+
+def test_gather_heuristic_respects_vmem():
+    plan = make_plan(4096, 1024, kappa=2, s=2)
+    from repro.core.blockperm import VMEM_BUDGET_BYTES, fused_variant_bytes
+    tn = tune.heuristic_tn(plan, 1, "fwd_gather", batch=256)
+    assert fused_variant_bytes(plan.kappa, plan.Br, plan.Bc, tn,
+                               plan.stream_itemsize,
+                               "fwd_gather") <= VMEM_BUDGET_BYTES
