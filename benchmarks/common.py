@@ -62,6 +62,15 @@ DATASETS = ("gaussian", "lowrank_noise", "sparse", "llm_weights")
 # timing
 # ---------------------------------------------------------------------------
 
+def geomean(xs) -> float:
+    """Geometric mean over positive finite entries (speedup ratios compose
+    multiplicatively — see docs/benchmarks.md#geomean-methodology); NaN for
+    an empty/filtered-out input.  The single aggregation rule every
+    bench gate uses."""
+    xs = [x for x in xs if x > 0 and np.isfinite(x)]
+    return float(np.exp(np.mean(np.log(xs)))) if xs else float("nan")
+
+
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall-time (seconds) of a jitted fn."""
     for _ in range(warmup):

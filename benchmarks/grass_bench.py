@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 import sys
 from typing import Dict, List
 
@@ -35,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_fn
+from benchmarks.common import geomean, time_fn
 from repro.attribution.grass import sparsify_mask
 from repro.core.blockperm import make_plan
 from repro.kernels import ops, tune
@@ -156,11 +155,6 @@ def bench_grid(B_values, sparse_dims, kappas, *, k, d_total_of, s=2, seed=0,
     return rows
 
 
-def _geomean(xs) -> float:
-    xs = [x for x in xs if x > 0 and math.isfinite(x)]
-    return float(np.exp(np.mean(np.log(xs)))) if xs else float("nan")
-
-
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
@@ -180,8 +174,8 @@ def main(argv=None) -> int:
                       d_total_of=d_total_of, iters=args.iters)
 
     all_exact = all(all(r["bit_exact"].values()) for r in rows)
-    geo_modeled = _geomean([r["modeled_speedup"] for r in rows])
-    geo_measured = _geomean([r["measured_speedup"] for r in rows])
+    geo_modeled = geomean([r["modeled_speedup"] for r in rows])
+    geo_measured = geomean([r["measured_speedup"] for r in rows])
     payload = {
         "meta": {
             "backend": jax.default_backend(),

@@ -21,14 +21,13 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 import os
 from typing import Dict, List
 
 import jax
 import numpy as np
 
-from benchmarks.common import time_fn
+from benchmarks.common import geomean, time_fn
 from repro.core.blockperm import SKETCH_VARIANTS as VARIANTS
 from repro.core.blockperm import make_plan
 from repro.kernels import ops, tune
@@ -100,11 +99,6 @@ def bench_grid(d_values, k_values, n_for, *, kappa=4, s=2, seed=0,
     return rows
 
 
-def _geomean(xs) -> float:
-    xs = [x for x in xs if x > 0 and math.isfinite(x)]
-    return float(np.exp(np.mean(np.log(xs)))) if xs else float("nan")
-
-
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale (d, k) grid")
@@ -129,9 +123,9 @@ def main(argv=None) -> None:
     rows = bench_grid(d_values, k_values, n_for, tn=args.tn, iters=args.iters,
                       autotune_first=args.autotune)
 
-    measured = _geomean([r["speedup"] for r in rows])
-    modeled = _geomean([r["modeled_speedup"] for r in rows])
-    modeled_bf16 = _geomean(
+    measured = geomean([r["speedup"] for r in rows])
+    modeled = geomean([r["modeled_speedup"] for r in rows])
+    modeled_bf16 = geomean(
         [r["modeled_speedup"] for r in rows if r["dtype"] == "bfloat16"])
     payload = {
         "meta": {

@@ -70,11 +70,21 @@ class GrassPipeline:
     chunk by chunk.  With ``cfg.fused=False`` the same scan materializes
     ``grads[:, mask]`` before sketching (the seed behavior, bit-compatible
     features).
+
+    Multi-device: pass ``mesh``/``shard_axis`` to BATCH-SHARD featurize
+    over the chunk axis — every device scans its own chunks (params and
+    mask replicated, no collective; examples are independent), so the
+    feature cache builds P× wider per step.  Features are identical to the
+    single-device run (chunks are computed by the same per-chunk launch
+    either way).
     """
 
-    def __init__(self, cfg: GrassPipelineConfig, params):
+    def __init__(self, cfg: GrassPipelineConfig, params, mesh=None,
+                 shard_axis: str = "data"):
         self.cfg = cfg
         self.params = params
+        self.mesh = mesh
+        self.shard_axis = shard_axis
         d_total = sum(p.size for p in jax.tree.leaves(params))
         self.d_total = d_total
         d_keep = min(cfg.sparse_dim, d_total)
@@ -93,6 +103,10 @@ class GrassPipeline:
             b = xs.shape[0]
             c = max(1, min(cfg.chunk, b))
             n_chunks = -(-b // c)
+            if mesh is not None:
+                # batch-sharded: every device scans n_chunks/P chunks
+                n_dev = mesh.shape[shard_axis]
+                n_chunks = -(-n_chunks // n_dev) * n_dev
             pad = n_chunks * c - b
             if pad:
                 # repeat the first example: gradients stay well-defined and
@@ -104,12 +118,32 @@ class GrassPipeline:
             xc = xs.reshape((n_chunks, c) + xs.shape[1:])
             yc = ys.reshape((n_chunks, c) + ys.shape[1:])
 
-            def step(_, xy):
+            def chunk_feats(p_, xy):
+                """One chunk: vmapped per-example grads -> fused sketch.
+                The SAME body drives both branches, so sharded features
+                cannot drift from single-device ones."""
                 xb, yb = xy
-                grads = jax.vmap(lambda x, y: self._gfn(p, x, y))(xb, yb)
-                return 0, sketch_chunk(grads)       # (c, k) per chunk
+                grads = jax.vmap(lambda x, y: self._gfn(p_, x, y))(xb, yb)
+                return sketch_chunk(grads)          # (c, k) per chunk
 
-            _, feats = jax.lax.scan(step, 0, (xc, yc))
+            if mesh is None:
+                _, feats = jax.lax.scan(
+                    lambda car, xy: (car, chunk_feats(p, xy)), 0, (xc, yc))
+            else:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+
+                def scan_local(p_, xcl, ycl):
+                    _, f = jax.lax.scan(
+                        lambda car, xy: (car, chunk_feats(p_, xy)),
+                        0, (xcl, ycl))
+                    return f
+
+                feats = shard_map(
+                    scan_local, mesh=mesh,
+                    in_specs=(P(), P(shard_axis), P(shard_axis)),
+                    out_specs=P(shard_axis), check_rep=False,
+                )(p, xc, yc)
             return feats.reshape(n_chunks * c, -1)[:b]
 
         self._featurize = jax.jit(featurize)

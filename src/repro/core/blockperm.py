@@ -193,7 +193,11 @@ def make_plan(
       seed: master seed; all randomness (wiring + intra-block hashes)
         derives from it deterministically.
       block_rows: pin B_r explicitly (rounded up to a power of two);
-        disables the VMEM-budget auto-shrink.
+        disables the VMEM-budget auto-shrink.  The pin is HONORED: the
+        effective ``plan.Br`` is exactly the rounded pin (M grows as
+        needed to keep ``M·B_r ≥ k`` and ``κ ≤ M``), and an unrealizable
+        pin (``s`` does not divide the rounded value) raises
+        ``ValueError`` instead of being silently clamped.
       max_block_rows: cap on the auto-chosen B_r.
       dtype: streaming precision, ``"float32"`` (default) or
         ``"bfloat16"``.  Controls only how kernels STREAM the input from
@@ -214,18 +218,31 @@ def make_plan(
     _check_dtype(dtype)
 
     if block_rows is not None:
+        # Honor the pin (rounded up to a power of two).  A pin that cannot
+        # host the row partition raises — it must never be silently clamped
+        # (autotune_plan's B_r sweep relies on distinct pins producing
+        # distinct grids).
         Br = _next_pow2(block_rows)
+        if Br % s != 0:
+            raise ValueError(
+                f"block_rows={block_rows} (rounded to Br={Br}) is not "
+                f"realizable: s={s} must divide Br")
+        M = _next_pow2(max(1, math.ceil(k / Br)))
+        # κ ≤ M is required for edge-disjoint wiring; with Br pinned the
+        # only degree of freedom is M (k_pad = M·Br grows accordingly).
+        while M < kappa:
+            M *= 2
     else:
         Br = min(_next_pow2(max(s, min(max_block_rows, k))), max_block_rows)
         Br = max(Br, _next_pow2(s))
-    M = _next_pow2(max(1, math.ceil(k / Br)))
-    # Ensure κ ≤ M: grow M (shrinking Br) until the wiring is realizable.
-    while M < kappa:
-        M *= 2
-    Br = max(_next_pow2(math.ceil(k / M)), _next_pow2(s))
-    if Br % s != 0:
-        # s must divide Br for the row partition; round s down to a divisor.
-        raise ValueError(f"s={s} must divide Br={Br} (both powers of two ok)")
+        M = _next_pow2(max(1, math.ceil(k / Br)))
+        # Ensure κ ≤ M: grow M (shrinking Br) until the wiring is realizable.
+        while M < kappa:
+            M *= 2
+        Br = max(_next_pow2(math.ceil(k / M)), _next_pow2(s))
+        if Br % s != 0:
+            # s must divide Br for the row partition; round s down to a divisor.
+            raise ValueError(f"s={s} must divide Br={Br} (both powers of two ok)")
     Bc = _aligned_bc(d, M)
     # Keep the fused v2 working set (stacked Φ ∝ κ·Br·Bc plus pipelined
     # blocks ∝ Bc, see kernels/flashsketch) resident in VMEM by trading Br

@@ -1,0 +1,30 @@
+"""Multi-device FlashSketch: shard_map-mapped sketching + distributed
+RandNLA on top of the ``sharding``/``launch.mesh`` substrate.
+
+  sharded_apply — row- / column- / batch-sharded sketch application.  The
+                  row-sharded path psums per-ℓ partials so the result is
+                  BIT-EXACT against the single-device kernels (fp32 and
+                  bf16); S is never gathered and no device materializes
+                  all of A.
+  dist_solvers  — distributed sketch-and-precondition least squares:
+                  sharded sketch → replicated R → LSQR with shard_map'd
+                  matvec/rmatvec injected into ``solvers.lsqr_operator``.
+
+Cost model: ``roofline.sketch_model.dist_sketch_cost`` /
+``modeled_dist_speedup`` charge the psum at ``hw.ICI_BW``;
+``benchmarks/dist_bench.py`` gates exactness and modeled scaling.
+"""
+from repro.distributed.sharded_apply import (  # noqa: F401
+    check_row_partition,
+    local_partial_apply,
+    partial_fits_vmem,
+    partial_tables,
+    plan_for_mesh,
+    sketch_apply_batched_sharded,
+    sketch_apply_colsharded,
+    sketch_apply_sharded,
+)
+from repro.distributed.dist_solvers import (  # noqa: F401
+    dist_sketch_precondition_lstsq,
+    sharded_matvec_ops,
+)

@@ -217,7 +217,8 @@ def _fused_transpose_kernel(tab_ref, *refs, plan: BlockPermPlan, scale):
 
 
 def _fused_gather_kernel(tab_ref, rmap_ref, a_any, o_ref, gat_ref, phi_ref,
-                         sem, *, plan: BlockPermPlan, scale, phi_fn, tn: int):
+                         sem, *, plan: BlockPermPlan, scale, phi_fn, tn: int,
+                         n_rem: int = 0):
     """Gather-fused fwd/blockrow body: Y[g, j] = Φ* · A[rmap[blocks], j·tn:].
 
     The operand ``a_any`` is the FULL source matrix left in HBM
@@ -227,9 +228,17 @@ def _fused_gather_kernel(tab_ref, rmap_ref, a_any, o_ref, gat_ref, phi_ref,
     rows into ``gat_ref`` (VMEM) row by row — the TPU analogue of the
     coalesced index-streamed gather — then reuses the v2 single-write
     contraction against the Φ scratch cached across column tiles.
+
+    ``n_rem`` is the ragged column remainder ``n % tn`` of the UNPADDED
+    source: when nonzero, the last column tile DMAs only the ``n_rem``
+    valid columns per row (the source is never padded — padding A would
+    materialize a full HBM copy, exactly what this path exists to avoid)
+    and zero-fills the scratch tail so the contraction still sees a full
+    (κ·B_c, tn) tile.
     """
     g = pl.program_id(0)
     j = pl.program_id(1)
+    last_j = pl.num_programs(1) - 1
 
     @pl.when(j == 0)
     def _build_phi():
@@ -239,30 +248,52 @@ def _fused_gather_kernel(tab_ref, rmap_ref, a_any, o_ref, gat_ref, phi_ref,
                 phi_fn(plan, g, h).astype(phi_ref.dtype)
             )
 
-    def _row_dma(ell, h, r):
+    def _row_dma(ell, h, r, width):
         src = rmap_ref[h * plan.Bc + r]
         return pltpu.make_async_copy(
-            a_any.at[src, pl.ds(j * tn, tn)],
-            gat_ref.at[ell * plan.Bc + r, :],
+            a_any.at[src, pl.ds(j * tn, width)],
+            gat_ref.at[ell * plan.Bc + r, pl.ds(0, width)],
             sem,
         )
 
-    # Issue every row copy before waiting on any: the destinations are
-    # disjoint scratch rows and the DMA semaphore counts completions, so
-    # up to κ·B_c transfers are in flight at once instead of paying κ·B_c
-    # serialized HBM round-trips per program.
-    for ell in range(plan.kappa):
-        h = tab_ref[ell, g]
-        jax.lax.fori_loop(
-            0, plan.Bc,
-            lambda r, _, _ell=ell, _h=h: (_row_dma(_ell, _h, r).start(), 0)[1],
-            0)
-    for ell in range(plan.kappa):
-        h = tab_ref[ell, g]
-        jax.lax.fori_loop(
-            0, plan.Bc,
-            lambda r, _, _ell=ell, _h=h: (_row_dma(_ell, _h, r).wait(), 0)[1],
-            0)
+    def _gather_rows(width):
+        # Issue every row copy before waiting on any: the destinations are
+        # disjoint scratch rows and the DMA semaphore counts completions, so
+        # up to κ·B_c transfers are in flight at once instead of paying κ·B_c
+        # serialized HBM round-trips per program.
+        for ell in range(plan.kappa):
+            h = tab_ref[ell, g]
+            jax.lax.fori_loop(
+                0, plan.Bc,
+                lambda r, _, _ell=ell, _h=h: (
+                    _row_dma(_ell, _h, r, width).start(), 0)[1],
+                0)
+        for ell in range(plan.kappa):
+            h = tab_ref[ell, g]
+            jax.lax.fori_loop(
+                0, plan.Bc,
+                lambda r, _, _ell=ell, _h=h: (
+                    _row_dma(_ell, _h, r, width).wait(), 0)[1],
+                0)
+
+    if n_rem:
+        if a_any.shape[1] >= tn:
+            # only trace the full-width branch when full tiles exist — a
+            # tn-wide slice of a narrower-than-tn operand is invalid even
+            # inside a never-taken pl.when
+            @pl.when(j != last_j)
+            def _full_tile():
+                _gather_rows(tn)
+
+        @pl.when(j == last_j)
+        def _ragged_tile():
+            _gather_rows(n_rem)
+            # scratch persists across grid steps: columns ≥ n_rem hold the
+            # previous tile's data and must be zeroed, making the ragged
+            # tail bit-identical to a zero-padded materialized gather
+            gat_ref[:, n_rem:] = jnp.zeros_like(gat_ref[:, n_rem:])
+    else:
+        _gather_rows(tn)
 
     if plan.d < plan.d_pad:
         # Padded masked rows (global index ≥ plan.d) gathered a placeholder
@@ -280,6 +311,82 @@ def _fused_gather_kernel(tab_ref, rmap_ref, a_any, o_ref, gat_ref, phi_ref,
     o_ref[...] = jnp.dot(
         phi_ref[...], gat_ref[...], preferred_element_type=jnp.float32
     ) * scale
+
+
+def _partial_fwd_kernel(tab_ref, a_ref, o_ref, phi_ref, *,
+                        plan: BlockPermPlan, phi_fn):
+    """Per-ℓ COMPACT partial sketch over an owned contiguous block slab.
+
+    The multi-device building block (``repro.distributed``): a device that
+    owns input blocks ``[lo, lo + M_loc)`` of a row-sharded A computes, for
+    every owned pair, the UNSCALED contribution ``Φ_{g,h} · A_h``.  The
+    wiring π_ℓ is a permutation, so each owned input block ``h`` feeds
+    exactly ONE output block ``g = π_ℓ⁻¹(h)`` per level — the grid is
+    ``(M_loc, κ, n/tn)`` over owned pairs ONLY (per-chip MXU, HBM-input
+    and Φ-build work all shard 1/P; this is what
+    ``roofline.sketch_model.dist_sketch_cost`` charges), and the caller
+    scatters the compact ``(κ, M_loc·B_r, n)`` result into the zero-padded
+    global ``(κ, k_pad, n)`` layout.  The per-ℓ slices stay separate so
+    the cross-device ``psum`` adds exactly one nonzero contributor per
+    element (block ownership is a partition) — an EXACT fp32 reduction —
+    and the κ-fold happens after, in the reference oracle's summation
+    order.
+
+    ``j`` innermost; the (B_r, B_c) Φ tile is cached in VMEM scratch
+    across the column tiles (rebuilt at ``j == 0``).  Each output tile is
+    written exactly once (v2's single-write property).
+
+    ``tab_ref`` is the (2, κ, M_loc) prefetch table
+    ``[global output block g, global input block h]`` — both GLOBAL block
+    ids feed the Φ hashes, which is what makes the partials globally
+    consistent; the input gather is just the local slab position ``m``.
+    """
+    m = pl.program_id(0)
+    ell = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _build_phi():
+        g = tab_ref[0, ell, m]
+        h = tab_ref[1, ell, m]
+        phi_ref[...] = phi_fn(plan, g, h).astype(phi_ref.dtype)
+
+    o_ref[0] = jnp.dot(
+        phi_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _partial_masked_kernel(tab_ref, a_ref, o_ref, phi_ref, *,
+                           plan: BlockPermPlan, phi_fn):
+    """Ownership-MASKED per-ℓ partial over a block slab (full (M, κ, n/tn)
+    grid, Φ zeroed for non-owned pairs).
+
+    Kept for the FLASHBLOCKROW wiring, which is iid (NOT a permutation):
+    an owned input block may feed zero or several output blocks per level,
+    so there is no compact owned-pair grid.  Appendix-variant / eval-only
+    — the per-chip work does not shard (every device walks the full grid).
+
+    ``tab_ref`` is the (3, κ, M) prefetch table
+    ``[local gather index, global h (hash input), owned flag]``.
+    """
+    g = pl.program_id(0)
+    ell = pl.program_id(1)
+    j = pl.program_id(2)
+    owned = tab_ref[2, ell, g]
+
+    @pl.when((j == 0) & (owned == 1))
+    def _build_phi():
+        h = tab_ref[1, ell, g]
+        phi_ref[...] = phi_fn(plan, g, h).astype(phi_ref.dtype)
+
+    @pl.when((j == 0) & (owned == 0))
+    def _zero_phi():
+        # non-owned pairs still skip the s hash passes
+        phi_ref[...] = jnp.zeros_like(phi_ref)
+
+    o_ref[0] = jnp.dot(
+        phi_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -357,11 +464,16 @@ def _run_fused(plan, kernel, tab, operand, in_block, out_block, phi_shape,
 
 def _run_fused_gather(plan, kernel, tab, row_map, operand, out_block,
                       out_rows, n, tn, interpret):
-    """Gather launcher: grid (M, n/tn); operand stays in HBM (ANY memory
+    """Gather launcher: grid (M, ⌈n/tn⌉); operand stays in HBM (ANY memory
     space), masked rows arrive via in-kernel DMA driven by the
     scalar-prefetched ``row_map``; Φ scratch is cached across j as in v2.
+
+    ``n`` may be ragged (``n % tn != 0``): only the OUTPUT is padded to the
+    tile grid — the kernel clips the last tile's row DMAs to the valid
+    width, so the HBM source is never copied/padded.
     """
-    grid = (plan.M, n // tn)
+    n_pad = ((n + tn - 1) // tn) * tn
+    grid = (plan.M, n_pad // tn)
     cdt = operand.dtype
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -377,7 +489,7 @@ def _run_fused_gather(plan, kernel, tab, row_map, operand, out_block,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((out_rows, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((out_rows, n_pad), jnp.float32),
         interpret=interpret,
         compiler_params=_compiler_params(interpret, ("parallel", "arbitrary")),
     )(jnp.asarray(tab), jnp.asarray(row_map, jnp.int32), operand)
@@ -446,21 +558,25 @@ def flashsketch_pallas_gather(
 
     Args:
       plan: frozen plan for the *masked* input dim (``plan.d`` = rows kept).
-      A: ``(d_src, n)`` source matrix, ``n % tn == 0``.  Stays in HBM,
-        uncopied; the kernel DMAs only the masked rows.
+      A: ``(d_src, n)`` source matrix; ``n`` may be ragged (``n % tn != 0``
+        — the kernel handles the last tile in-kernel, A is NEVER padded or
+        copied).  Stays in HBM; the kernel DMAs only the masked rows.
       row_map: ``(d_pad,)`` int32 — source row of A feeding each padded
         masked row.  Entries beyond ``plan.d`` may point at any valid row
         (``ops._row_map_for`` uses 0); the kernel zeroes those gather-
         scratch rows before the contraction.
+
+    Returns:
+      ``(k_pad, ⌈n/tn⌉·tn)`` fp32 — the caller slices off the padded
+      output columns (they are exact zeros).
     """
     if interpret is None:
         interpret = _should_interpret()
     _, n = A.shape
     assert row_map.shape == (plan.d_pad,), (row_map.shape, plan.d_pad)
-    assert n % tn == 0, (n, tn)
     kernel = functools.partial(
         _fused_gather_kernel, plan=plan, scale=plan.scale, phi_fn=_phi_tile,
-        tn=tn,
+        tn=tn, n_rem=n % tn,
     )
     return _run_fused_gather(
         plan, kernel, _fwd_neighbor_table(plan), row_map, _stream(plan, A),
@@ -477,16 +593,19 @@ def blockrow_pallas_gather(
     tn: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """FLASHBLOCKROW over gathered rows: Y = S_row · A[row_map, :], fused."""
+    """FLASHBLOCKROW over gathered rows: Y = S_row · A[row_map, :], fused.
+
+    Ragged ``n`` handled in-kernel like ``flashsketch_pallas_gather`` —
+    only the output is tile-padded, never the HBM source.
+    """
     if interpret is None:
         interpret = _should_interpret()
     _, n = A.shape
     assert row_map.shape == (plan.d_pad,), (row_map.shape, plan.d_pad)
-    assert n % tn == 0, (n, tn)
     scale = plan.scale * math.sqrt(plan.d_pad / plan.k_pad)
     kernel = functools.partial(
         _fused_gather_kernel, plan=plan, scale=scale, phi_fn=_phi_rows_tile,
-        tn=tn,
+        tn=tn, n_rem=n % tn,
     )
     return _run_fused_gather(
         plan, kernel, _blockrow_table(plan), row_map, _stream(plan, A),
@@ -519,6 +638,86 @@ def blockrow_pallas(
         phi_shape=(plan.Br, plan.kappa * plan.Bc),
         out_rows=plan.k_pad, n=n, tn=tn, interpret=interpret,
     )
+
+
+def flashsketch_pallas_partial(
+    plan: BlockPermPlan,
+    A_local: jnp.ndarray,
+    tables: jnp.ndarray,
+    *,
+    tn: int = 128,
+    rows_pattern: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-ℓ UNSCALED partial sketch of a contiguous block slab.
+
+    Args:
+      plan: the frozen GLOBAL plan (full M-block grid).
+      A_local: ``(M_loc·B_c, n)`` slab of the padded input owned by this
+        device (a contiguous range of ``M_loc`` of the M input blocks),
+        ``n % tn == 0``.  Streamed in ``plan.stream_dtype``.
+      tables: from ``repro.distributed.sharded_apply.partial_tables`` —
+        ``(2, κ, M_loc)`` int32 ``[global g, global h]`` for the default
+        COMPACT owned-pair kernel, or ``(3, κ, M)`` ``[local gather index,
+        global h, owned]`` for the masked FLASHBLOCKROW form
+        (``rows_pattern=True``).  May be traced arrays — ownership depends
+        on ``lax.axis_index`` under ``shard_map``.
+      tn: column-tile width.
+      rows_pattern: use the FLASHBLOCKROW per-row Φ pattern (iid wiring ⇒
+        masked full-grid kernel instead of the compact one).
+
+    Returns:
+      fp32 per-ℓ partials, UNSCALED: compact ``(κ, M_loc·B_r, n)`` for the
+      default path (caller scatters rows ``m`` to output blocks
+      ``tables[0, ℓ, m]``), or global ``(κ, k_pad, n)`` with exact zeros
+      at non-owned positions for ``rows_pattern``.  Either way, ``psum``
+      over the shard axis then an ℓ-ordered fold recovers the full
+      ``S·A / scale`` bit-exactly (one nonzero contributor per element).
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    rows_loc, n = A_local.shape
+    assert rows_loc % plan.Bc == 0, (rows_loc, plan.Bc)
+    assert n % tn == 0, (n, tn)
+    M_loc = rows_loc // plan.Bc
+    assert plan.M % M_loc == 0, (plan.M, M_loc)
+    operand = _stream(plan, A_local)
+    if rows_pattern:
+        assert tables.shape == (3, plan.kappa, plan.M), tables.shape
+        kernel = functools.partial(
+            _partial_masked_kernel, plan=plan, phi_fn=_phi_rows_tile)
+        grid = (plan.M, plan.kappa, n // tn)
+        in_spec = pl.BlockSpec(
+            (plan.Bc, tn), lambda g, l, j, tab_ref: (tab_ref[0, l, g], j))
+        out_rows = plan.k_pad
+        out_map = lambda g, l, j, tab_ref: (l, g, j)       # noqa: E731
+    else:
+        assert tables.shape == (2, plan.kappa, M_loc), tables.shape
+        kernel = functools.partial(
+            _partial_fwd_kernel, plan=plan, phi_fn=_phi_tile)
+        grid = (M_loc, plan.kappa, n // tn)
+        in_spec = pl.BlockSpec(
+            (plan.Bc, tn), lambda m, l, j, tab_ref: (m, j))
+        out_rows = M_loc * plan.Br
+        out_map = lambda m, l, j, tab_ref: (l, m, j)       # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[in_spec],
+        out_specs=pl.BlockSpec((1, plan.Br, tn), out_map),
+        scratch_shapes=[pltpu.VMEM((plan.Br, plan.Bc), operand.dtype)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (plan.kappa, out_rows, n), jnp.float32),
+        interpret=interpret,
+        # j must run sequentially per (block, ℓ) — the Φ scratch is built
+        # at j == 0; block tiles are independent.
+        compiler_params=_compiler_params(
+            interpret, ("parallel", "arbitrary", "arbitrary")),
+    )(jnp.asarray(tables, jnp.int32), operand)
 
 
 # ---------------------------------------------------------------------------

@@ -319,9 +319,12 @@ def _apply_gather_path(plan, A, row_index, impl, tn, dtype, *, variant,
         return materialized_apply(A[row_index], impl)
     if tn is None:
         tn = tune.resolve_tn(plan, n, variant)
-    Ap, n = _pad_cols(A, tn)
+    # A is deliberately NOT column-padded here — a ragged last tile is
+    # zero-filled inside the gather kernel.  Padding the (d_src, n) HBM
+    # operand would materialize a full copy of A, breaking the path's
+    # no-A-copy contract (only the small (k, ·) output is tile-padded).
     rmap = _row_map_for(plan, row_index)
-    Y = gather_kernel(plan, Ap, rmap, tn=tn)
+    Y = gather_kernel(plan, A, rmap, tn=tn)
     return Y[: plan.k, :n]
 
 
@@ -443,7 +446,28 @@ def blockrow_apply(
     return Y[: plan.k, :n]
 
 
+def _resolve_batched_tn(plan, impl, dtype, n: int, n_batch: int,
+                        row_index) -> Optional[int]:
+    """Trace-time tile width for a batch-folded launch (shared by
+    ``sketch_apply_batched`` and ``sketch_vectors`` so the two batch entry
+    points resolve tiles identically).
+
+    Resolves against the autotuner's BATCHED shape class
+    (``tune.resolve_tn(..., batch=n_batch)``) — but only when the launch
+    will actually be the fused v2 kernel; v1 dispatch (explicit or the
+    VMEM-overflow downgrade) must keep ``tn=None`` so the downstream
+    ``_resolve_tn`` applies ``v1_default_tn``, not the v2 heuristic.
+    """
+    eff_plan = _resolve_plan(plan, dtype)
+    variant = "fwd" if row_index is None else "fwd_gather"
+    if (_resolve_impl(impl) == "pallas"
+            and tune.fused_fits_vmem(eff_plan, n * n_batch, variant)):
+        return tune.resolve_tn(eff_plan, n, variant, batch=n_batch)
+    return None
+
+
 def sketch_vectors(plan: BlockPermPlan, x: jnp.ndarray, impl: Impl = "auto",
+                   tn: Optional[int] = None, dtype: Optional[str] = None,
                    *, row_index: Optional[jnp.ndarray] = None):
     """Sketch a batch of vectors laid out along the LAST axis.
 
@@ -455,6 +479,10 @@ def sketch_vectors(plan: BlockPermPlan, x: jnp.ndarray, impl: Impl = "auto",
         sketch).
       impl: one of ``"auto" | "pallas" | "pallas_v1" | "xla"`` (see
         ``sketch_apply``).
+      tn / dtype: forwarded to ``sketch_apply``.  ``tn=None`` resolves
+        against the autotuner's *batched* shape class exactly as
+        ``sketch_apply_batched`` does (each vector is a width-1 matrix,
+        the batch is folded into the column axis).
       row_index: optional ``(plan.d,)`` int rows — fused
         ``S x[..., row_index]`` (the GraSS sparsify→sketch fusion).
 
@@ -463,7 +491,11 @@ def sketch_vectors(plan: BlockPermPlan, x: jnp.ndarray, impl: Impl = "auto",
       is flattened into the column axis of one ``sketch_apply`` launch.
     """
     flat = x.reshape(-1, x.shape[-1])                 # (n, d)
-    Y = sketch_apply(plan, flat.T, impl, row_index=row_index)   # (k, n)
+    if tn is None:
+        tn = _resolve_batched_tn(plan, impl, dtype, 1, flat.shape[0],
+                                 row_index)
+    Y = sketch_apply(plan, flat.T, impl, tn, dtype,
+                     row_index=row_index)             # (k, n)
     return Y.T.reshape(*x.shape[:-1], plan.k)
 
 
@@ -506,15 +538,7 @@ def sketch_apply_batched(
     for b in batch:
         n_batch *= b
     if tn is None:
-        # Resolve against the BATCHED shape class — but only when the launch
-        # will actually be the fused v2 kernel; v1 dispatch (explicit or the
-        # VMEM-overflow downgrade) must keep tn=None so the downstream
-        # _resolve_tn applies v1_default_tn, not the v2 heuristic.
-        eff_plan = _resolve_plan(plan, dtype)
-        variant = "fwd" if row_index is None else "fwd_gather"
-        if (_resolve_impl(impl) == "pallas"
-                and tune.fused_fits_vmem(eff_plan, n * n_batch, variant)):
-            tn = tune.resolve_tn(eff_plan, n, variant, batch=n_batch)
+        tn = _resolve_batched_tn(plan, impl, dtype, n, n_batch, row_index)
     flat = jnp.moveaxis(A.reshape((-1, d, n)), 0, 1).reshape(d, -1)  # (d, B·n)
     Y = sketch_apply(plan, flat, impl, tn, dtype, row_index=row_index)
     Y = jnp.moveaxis(Y.reshape(plan.k, -1, n), 1, 0)                 # (k, B·n)

@@ -280,21 +280,35 @@ def autotune_plan(
 
     The ``B_r`` sweep changes the padded shapes, so the returned plan must be
     used in place of a ``make_plan`` default for the win to apply.
+
+    Only candidates with the SAME effective ``k_pad`` as the default plan
+    are timed: a pin that inflates ``k_pad`` (e.g. ``B_r·2`` when M is
+    already at the κ floor) would sketch a different statistical object —
+    more rows, different embedding — and raw launch time cannot rank it
+    against the requested-size plans.  Such candidates are skipped, as are
+    duplicates of an already-timed effective ``(M, B_r)`` grid.
     """
+    base = make_plan(d, k, kappa=kappa, s=s, seed=seed, dtype=dtype)
     if block_rows_candidates is None:
-        base = make_plan(d, k, kappa=kappa, s=s, seed=seed, dtype=dtype)
         block_rows_candidates = sorted(
             {br for br in (base.Br // 2, base.Br, base.Br * 2)
              if br >= max(s, 1) and br % max(s, 1) == 0}
         )
     best_plan: Optional[BlockPermPlan] = None
     best: Optional[TuneResult] = None
+    seen_grids: set = set()
     for br in block_rows_candidates:
         try:
             plan = make_plan(d, k, kappa=kappa, s=s, seed=seed,
                              block_rows=br, dtype=dtype)
         except ValueError:
             continue
+        # Dedupe by the EFFECTIVE grid: two pins that resolve to the same
+        # (M, Br) would time the identical kernel twice.  Skip candidates
+        # whose k_pad differs from the default plan's — not comparable.
+        if plan.k_pad != base.k_pad or (plan.M, plan.Br) in seen_grids:
+            continue
+        seen_grids.add((plan.M, plan.Br))
         res = autotune(plan, n, variant, tns=tns, warmup=warmup, iters=iters)
         if _is_better(res, best):
             best_plan, best = plan, dataclasses.replace(res, block_rows=plan.Br)

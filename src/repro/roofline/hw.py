@@ -12,6 +12,12 @@ HBM_PER_CHIP = 16 * 2**30       # 16 GiB
 # per the assignment formula (collective_bytes / (chips × link_bw)).
 ICI_LINKS = 1
 
+# Effective per-chip interconnect bandwidth used by the collective terms in
+# roofline/sketch_model (psum of the sharded-sketch partials, the dist
+# solver's per-iteration reductions).  Single-link conservative, matching
+# ICI_LINKS above.
+ICI_BW = ICI_LINK_BW * ICI_LINKS
+
 # Minimum useful HBM transaction: a gathered (non-contiguous) row shorter
 # than this still pays for the full transaction — the term that makes
 # per-example (n = 1) gathers so expensive and batched gathers cheap.

@@ -23,6 +23,7 @@ through ``kernels.ops`` (Pallas on TPU, XLA oracle on CPU), so the paper's
 from repro.solvers.sketch_precondition import (  # noqa: F401
     SolveResult,
     lsqr,
+    lsqr_operator,
     pcg_normal,
     sketch_precondition_lstsq,
 )

@@ -63,37 +63,53 @@ def _identity(v):
     return v
 
 
-def _right_precond_ops(A: jnp.ndarray, R: Optional[jnp.ndarray]):
-    """(matvec, rmatvec, unprecondition) for the operator ``A R⁻¹``."""
+def _right_precond_ops(
+    A: Optional[jnp.ndarray],
+    R: Optional[jnp.ndarray],
+    matvec: Optional[Callable] = None,
+    rmatvec: Optional[Callable] = None,
+):
+    """(matvec, rmatvec, unprecondition) for the operator ``A R⁻¹``.
+
+    The base operator is either the dense array ``A`` or INJECTED
+    ``matvec``/``rmatvec`` closures (e.g. ``shard_map``'d products over a
+    row-sharded A — see ``repro.distributed.dist_solvers``); the
+    right-preconditioner composition is identical either way.
+    """
+    mv = matvec if matvec is not None else (lambda v: A @ v)
+    rmv = rmatvec if rmatvec is not None else (lambda u: A.T @ u)
     if R is None:
-        return (lambda v: A @ v, lambda u: A.T @ u, _identity)
+        return mv, rmv, _identity
     Rt = R.T
 
-    def matvec(v):                      # A R⁻¹ v
-        return A @ jsl.solve_triangular(R, v, lower=False)
+    def pmatvec(v):                     # A R⁻¹ v
+        return mv(jsl.solve_triangular(R, v, lower=False))
 
-    def rmatvec(u):                     # R⁻ᵀ Aᵀ u
-        return jsl.solve_triangular(Rt, A.T @ u, lower=True)
+    def prmatvec(u):                    # R⁻ᵀ Aᵀ u
+        return jsl.solve_triangular(Rt, rmv(u), lower=True)
 
     def unprecondition(y):              # x = R⁻¹ y
         return jsl.solve_triangular(R, y, lower=False)
 
-    return matvec, rmatvec, unprecondition
+    return pmatvec, prmatvec, unprecondition
 
 
-@functools.partial(jax.jit, static_argnames=("tol", "max_iters", "has_R"))
-def _lsqr_jit(A, b, R, x0, *, tol: float, max_iters: int, has_R: bool):
+def _lsqr_recurrence(matvec, rmatvec, unprec, base_matvec, b, x0, nvars,
+                     *, tol: float, max_iters: int):
     """Golub–Kahan LSQR on ``min ||A R⁻¹ y - b||`` with x = R⁻¹ y.
 
-    Carries the standard (u, v, w, phibar, rhobar) recurrence; stops when
-    the recurrence residual estimate ``phibar / ||b||`` drops below ``tol``
-    or ``max_iters`` is hit.  Returns (x, iterations, relres_estimate).
+    Operator-agnostic core (traced under jit by both the dense and the
+    injected-ops drivers): ``matvec``/``rmatvec`` are the PRECONDITIONED
+    products, ``base_matvec`` the raw ``A·`` used for the warm-start
+    residual.  Carries the standard (u, v, w, phibar, rhobar) recurrence;
+    stops when the recurrence residual estimate ``phibar / ||b||`` drops
+    below ``tol`` or ``max_iters`` is hit.  Returns
+    (x, iterations, relres_estimate).
     """
-    matvec, rmatvec, unprec = _right_precond_ops(A, R if has_R else None)
     dtype = b.dtype
     eps = jnp.finfo(dtype).tiny
 
-    r0 = b - A @ x0 if x0 is not None else b
+    r0 = b - base_matvec(x0) if x0 is not None else b
     bnorm = jnp.maximum(jnp.linalg.norm(b), eps)
     beta = jnp.linalg.norm(r0)
     u = r0 / jnp.maximum(beta, eps)
@@ -125,13 +141,21 @@ def _lsqr_jit(A, b, R, x0, *, tol: float, max_iters: int, has_R: bool):
         return (it + 1, y, u_next, v_next, w, alpha_next,
                 phibar_next, rhobar_next)
 
-    y0 = jnp.zeros(A.shape[1], dtype)
+    y0 = jnp.zeros(nvars, dtype)
     state = (jnp.int32(0), y0, u, v, v, alpha, beta, alpha)
     it, y, *_, phibar, _ = jax.lax.while_loop(cond, body, state)
     x = unprec(y)
     if x0 is not None:
         x = x + x0
     return x, it, phibar / bnorm
+
+
+@functools.partial(jax.jit, static_argnames=("tol", "max_iters", "has_R"))
+def _lsqr_jit(A, b, R, x0, *, tol: float, max_iters: int, has_R: bool):
+    """Dense-array LSQR chunk (shape-keyed jit cache over A/b/R)."""
+    matvec, rmatvec, unprec = _right_precond_ops(A, R if has_R else None)
+    return _lsqr_recurrence(matvec, rmatvec, unprec, lambda v: A @ v,
+                            b, x0, A.shape[1], tol=tol, max_iters=max_iters)
 
 
 def lsqr(
@@ -171,18 +195,84 @@ def lsqr(
     """
     if max_iters is None:
         max_iters = 200 if R is not None else 4 * A.shape[1]
-    max_iters = int(max_iters)
     R_arg = R if R is not None else jnp.zeros(())
+
+    def run_chunk(x, chunk):
+        return _lsqr_jit(A, b, R_arg, x, tol=float(tol),
+                         max_iters=chunk, has_R=R is not None)
+
+    return _restarted_drive(run_chunk, lambda x: A @ x - b, b, x0,
+                            nvars=A.shape[1], tol=tol,
+                            max_iters=int(max_iters),
+                            restart_every=restart_every)
+
+
+def lsqr_operator(
+    matvec: Callable,
+    rmatvec: Callable,
+    b: jnp.ndarray,
+    *,
+    nvars: int,
+    R: Optional[jnp.ndarray] = None,
+    x0: Optional[jnp.ndarray] = None,
+    tol: float = 1e-6,
+    max_iters: Optional[int] = None,
+    restart_every: int = 50,
+) -> SolveResult:
+    """LSQR on an ABSTRACT operator given by injected matvec ops.
+
+    Identical semantics to ``lsqr`` (chunked Golub–Kahan with
+    exact-residual restarts), but ``A`` never has to exist as one dense
+    array: ``matvec(v) -> (d,)`` and ``rmatvec(u) -> (n,)`` may be
+    arbitrary closures — ``repro.distributed.dist_solvers`` injects
+    ``shard_map``'d products over a row-sharded A, so the iteration runs
+    with only matrix SLABS resident per device.
+
+    Args:
+      matvec / rmatvec: the base (un-preconditioned) operator products.
+      b: (d,) right-hand side.
+      nvars: n, the number of unknowns (``rmatvec`` output length).
+      R / x0 / tol / max_iters / restart_every: as in ``lsqr``.
+
+    Returns:
+      ``SolveResult`` with the recomputed (not recurrence) final relres.
+    """
+    if max_iters is None:
+        max_iters = 200 if R is not None else 4 * nvars
+    has_R = R is not None
+    R_arg = R if has_R else jnp.zeros(())
+
+    # One jit per lsqr_operator call (the closures are fresh objects);
+    # fine for the distributed use where a solve is few, large chunks.
+    @functools.partial(jax.jit, static_argnames=("chunk",))
+    def _chunk_jit(Rv, x, *, chunk):
+        mv, rmv, unprec = _right_precond_ops(
+            None, Rv if has_R else None, matvec=matvec, rmatvec=rmatvec)
+        return _lsqr_recurrence(mv, rmv, unprec, matvec, b, x, nvars,
+                                tol=float(tol), max_iters=chunk)
+
+    def run_chunk(x, chunk):
+        return _chunk_jit(R_arg, x, chunk=chunk)
+
+    return _restarted_drive(run_chunk, lambda x: matvec(x) - b, b, x0,
+                            nvars=nvars, tol=tol, max_iters=int(max_iters),
+                            restart_every=restart_every)
+
+
+def _restarted_drive(run_chunk, resid, b, x0, *, nvars, tol, max_iters,
+                     restart_every) -> SolveResult:
+    """Shared chunk driver: run ``restart_every``-iteration recurrence
+    chunks, recompute the EXACT residual between chunks, warm-restart, and
+    stop on convergence or stall (precision floor)."""
     bnorm = float(jnp.linalg.norm(b))
     x = x0
     total = 0
     relres = float("inf")
     while total < max_iters:
         chunk = min(int(restart_every), max_iters - total)
-        x_new, it, _ = _lsqr_jit(A, b, R_arg, x, tol=float(tol),
-                                 max_iters=chunk, has_R=R is not None)
+        x_new, it, _ = run_chunk(x, chunk)
         total += int(it)
-        new_relres = float(jnp.linalg.norm(A @ x_new - b)) / max(bnorm, 1e-30)
+        new_relres = float(jnp.linalg.norm(resid(x_new))) / max(bnorm, 1e-30)
         stalled = new_relres >= relres
         if new_relres < relres:
             x, relres = x_new, new_relres
@@ -195,7 +285,7 @@ def lsqr(
             # burning the rest of max_iters on byte-identical work
             break
     if x is None:               # max_iters == 0 edge case
-        x = jnp.zeros(A.shape[1], b.dtype)
+        x = jnp.zeros(nvars, b.dtype)
     return SolveResult(x=x, iterations=total, relres=relres,
                        converged=relres <= tol)
 
