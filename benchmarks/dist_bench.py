@@ -14,9 +14,14 @@ Writes ``BENCH_dist.json``.  Each row covers one (d, n, k, κ, dtype) cell:
   * ``measured_*`` — wall-clock on THIS host.  8 emulated host devices
     share the same cores, so sharded wall-clock says nothing about real
     scaling; it is a smoke signal only.
-  * ``modeled_*`` — TPU-v5e numbers from ``roofline.sketch_model.
-    dist_sketch_cost`` (1/P HBM slab + ring-psum at ``hw.ICI_BW``); the
-    load-bearing scaling column off-TPU.
+  * ``modeled_*`` — TPU-v5e numbers priced from the LOWERING RECORDS of
+    the two organizations (``engine.cost_of``): the row-sharded partial
+    (1/P HBM slab + ring-psum at ``hw.ICI_BW``) against the single-chip
+    launch the dispatch engine would actually make.  For plans whose
+    fused v2 scratch cannot fit VMEM, that single-chip baseline is the
+    v1 revisiting kernel — what ``ops.sketch_apply`` really runs — not a
+    hypothetical v2 launch that could never fit (the PR-4 class of
+    model-vs-kernel contradiction).
 
 The run FAILS (non-zero exit) if any exactness gate is lost, if the
 modeled multi-chip scaling geomean drops below 1.5× at 8 devices, or if
@@ -39,6 +44,7 @@ import jax.numpy as jnp                                      # noqa: E402
 import numpy as np                                           # noqa: E402
 
 from benchmarks.common import geomean, time_fn               # noqa: E402
+from repro import engine                                     # noqa: E402
 from repro.distributed import (dist_sketch_precondition_lstsq,  # noqa: E402
                                plan_for_mesh,
                                sketch_apply_batched_sharded,
@@ -46,7 +52,6 @@ from repro.distributed import (dist_sketch_precondition_lstsq,  # noqa: E402
                                sketch_apply_sharded)
 from repro.kernels import ops                                # noqa: E402
 from repro.launch import mesh as mesh_lib                    # noqa: E402
-from repro.roofline import sketch_model                      # noqa: E402
 
 DEVICES = 8
 DTYPES = (None, "bfloat16")          # None = fp32 (the plan default)
@@ -81,8 +86,18 @@ def bench_grid(cells, *, mesh, axis, iters=3, batch=DEVICES) -> List[Dict]:
             measured_single_us = 1e6 * time_fn(single_fn, A, iters=iters)
             measured_sharded_us = 1e6 * time_fn(shard_fn, A, iters=iters)
 
-            c1 = sketch_model.kernel_cost(plan, n, version="v2")
-            cP = sketch_model.dist_sketch_cost(plan, n, DEVICES)
+            # modeled from the lowering records of the two organizations
+            # being compared: the single-chip launch as dispatch would
+            # actually make it (v2, or the v1 downgrade when the fused
+            # scratch cannot fit VMEM) and the row-sharded partial (the
+            # same engine path sharded_apply lowers through)
+            lw1 = engine.lower(plan, engine.LaunchSpec(
+                op="fwd", n=n, impl="pallas", tn=128))
+            lwP = engine.lower(plan, engine.LaunchSpec(
+                op="fwd", n=n, impl="pallas", tn=128, shard="row",
+                devices=DEVICES))
+            c1 = engine.cost_of(lw1)
+            cP = engine.cost_of(lwP)
             row = dict(
                 d=d, n=n, k=plan.k_pad, kappa=kappa,
                 dtype=dtype or "float32",
@@ -96,8 +111,8 @@ def bench_grid(cells, *, mesh, axis, iters=3, batch=DEVICES) -> List[Dict]:
                 modeled_per_chip_us=cP.modeled_us,
                 modeled_ici_us=1e6 * cP.ici_s,
                 modeled_bottleneck=cP.bottleneck,
-                modeled_speedup=sketch_model.modeled_dist_speedup(
-                    plan, n, DEVICES),
+                modeled_speedup=c1.modeled_us / cP.modeled_us,
+                lowering_sharded=lwP.describe(),
             )
             rows.append(row)
             ok = exact_row and exact_col and exact_batch
@@ -162,9 +177,11 @@ def main(argv=None) -> int:
                      f"{DEVICES} forced host devices; exact_* are "
                      "array_equal gates (psum'd per-kappa partials); "
                      "measured_* is host wall-clock (emulated devices share "
-                     "cores — smoke only); modeled_* is "
-                     "roofline.sketch_model.dist_sketch_cost on TPU v5e "
-                     "(1/P HBM slab + ring psum at hw.ICI_BW)"),
+                     "cores — smoke only); modeled_* is engine.cost_of of "
+                     "the two lowering records on TPU v5e: the row-sharded "
+                     "partial (1/P HBM slab + ring psum at hw.ICI_BW) vs "
+                     "the single-chip launch dispatch would actually make "
+                     "(v1 when the fused v2 scratch cannot fit VMEM)"),
         },
         "rows": rows,
         "solver": solver,

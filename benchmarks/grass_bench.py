@@ -35,9 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import geomean, time_fn
+from repro import engine
 from repro.attribution.grass import sparsify_mask
 from repro.core.blockperm import make_plan
-from repro.kernels import ops, tune
+from repro.kernels import ops
 from repro.roofline import sketch_model
 
 DTYPES = (None, "bfloat16")          # None = fp32 (the plan default)
@@ -77,9 +78,15 @@ def bench_grid(B_values, sparse_dims, kappas, *, k, d_total_of, s=2, seed=0,
                 # each kernel shape class gets its own VMEM-fitting tile —
                 # the fused gather scratch is smaller than the fwd kernel's
                 # double-buffered pipeline, so their budgets differ; the
-                # bit-exact check runs both at the common (smaller) width
-                tn = tune.resolve_tn(plan, 1, "fwd_gather", batch=B)
-                tn_ref = tune.resolve_tn(plan, B, "fwd")
+                # bit-exact check runs both at the common (smaller) width.
+                # Tiles come from the lowering records of the two launches
+                # being compared (the engine is the single decision layer).
+                lw_fused = engine.lower(plan, engine.LaunchSpec(
+                    op="fwd", n=1, impl="pallas", gather=True, batch=B))
+                lw_ref = engine.lower(plan, engine.LaunchSpec(
+                    op="fwd", n=B, impl="pallas"))
+                tn = lw_fused.tn
+                tn_ref = lw_ref.tn
                 tn_check = min(tn, tn_ref)
 
                 # -------- bit-exactness gate (all variants × dtypes)
@@ -129,6 +136,7 @@ def bench_grid(B_values, sparse_dims, kappas, *, k, d_total_of, s=2, seed=0,
                     B=B, d_total=d_total, sparse_dim=sparse_dim, k=plan.k_pad,
                     kappa=kappa, s=s, tn=tn, tn_ref=tn_ref,
                     M=plan.M, Br=plan.Br, Bc=plan.Bc,
+                    lowering_fused=lw_fused.describe(),
                     bit_exact=exact,
                     measured_fused_batched_us=fused_us,
                     measured_unfused_batched_us=unf_batched_us,

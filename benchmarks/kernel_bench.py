@@ -28,10 +28,10 @@ import jax
 import numpy as np
 
 from benchmarks.common import geomean, time_fn
+from repro import engine
 from repro.core.blockperm import SKETCH_VARIANTS as VARIANTS
 from repro.core.blockperm import make_plan
 from repro.kernels import ops, tune
-from repro.roofline import sketch_model
 
 DTYPES = ("float32", "bfloat16")
 
@@ -78,10 +78,14 @@ def bench_grid(d_values, k_values, n_for, *, kappa=4, s=2, seed=0,
                         )
                     v2_us = 1e6 * time_fn(v2, X, iters=iters)
                     v1_us = 1e6 * time_fn(v1, X, iters=iters)
-                    m1 = sketch_model.kernel_cost(
-                        plan, n, version="v1", variant=variant, tn=use_tn)
-                    m2 = sketch_model.kernel_cost(
-                        plan, n, version="v2", variant=variant, tn=use_tn)
+                    # modeled costs come from the SAME lowering records the
+                    # timed entry points resolve — not re-derived knobs
+                    lw2 = engine.lower(plan, engine.LaunchSpec(
+                        op=variant, n=n, impl="pallas", tn=use_tn))
+                    lw1 = engine.lower(plan, engine.LaunchSpec(
+                        op=variant, n=n, impl="pallas_v1", tn=use_tn))
+                    m2 = engine.cost_of(lw2)
+                    m1 = engine.cost_of(lw1)
                     row = dict(
                         d=d, k=plan.k_pad, n=n, kappa=kappa, s=s,
                         variant=variant, dtype=dtype, tn=use_tn, v1_tn=v1_tn,
@@ -91,6 +95,8 @@ def bench_grid(d_values, k_values, n_for, *, kappa=4, s=2, seed=0,
                         modeled_v1_us=m1.modeled_us, modeled_v2_us=m2.modeled_us,
                         modeled_speedup=m1.modeled_us / m2.modeled_us,
                         modeled_bottleneck_v2=m2.bottleneck,
+                        lowering_v2=lw2.describe(),
+                        lowering_v1=lw1.describe(),
                     )
                     rows.append(row)
                     print(f"{d:>7} {plan.k_pad:>5} {variant:>9} {dtype:>8} "

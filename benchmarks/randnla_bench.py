@@ -66,10 +66,20 @@ def make_ls_problem(d: int, n: int, cond: float, seed: int = 0):
     return A, A @ x_true, x_true
 
 
+def modeled_sketch_lowering(plan, n: int):
+    """The record of the sketch launch the solver issues, pinned to the v2
+    kernel (the modeled hardware is a TPU even when the host traces the
+    xla oracle) — modeled columns are priced from THIS record."""
+    from repro import engine
+    return engine.lower(plan, engine.LaunchSpec(op="fwd", n=n,
+                                                impl="pallas"))
+
+
 def modeled_solver_us(plan, n: int, iters: int, d: int) -> float:
-    """Modeled TPU time: sketch kernel (roofline model) + QR of the (k, n)
-    sketch + per-iteration 2 matvecs (4 d n flops) + triangular solves."""
-    sketch_us = sketch_model.kernel_cost(plan, n, version="v2").modeled_us
+    """Modeled TPU time: sketch kernel (roofline of the lowering record) +
+    QR of the (k, n) sketch + per-iteration 2 matvecs (4 d n flops) +
+    triangular solves."""
+    sketch_us = sketch_model.cost_of(modeled_sketch_lowering(plan, n)).modeled_us
     qr_flops = 2.0 * plan.k * n * n
     iter_flops = iters * (4.0 * d * n + 2.0 * n * n)
     dense_us = 1e6 * (qr_flops + iter_flops) / hw.PEAK_FLOPS_FP32
@@ -115,8 +125,10 @@ def bench_lstsq(problems, *, cond: float, seed: int, unprecond_cap: int,
                     measured_precond_us=t_us,
                     modeled_precond_us=modeled_solver_us(
                         plan, n, res.iterations, d),
-                    modeled_sketch_us=sketch_model.kernel_cost(
-                        plan, n, version="v2").modeled_us,
+                    modeled_sketch_us=sketch_model.cost_of(
+                        modeled_sketch_lowering(plan, n)).modeled_us,
+                    lowering_sketch=modeled_sketch_lowering(
+                        plan, n).describe(),
                 )
                 rows.append(row)
                 print(f"[{d}x{n}] kappa={kappa} {dtype:>8}: "

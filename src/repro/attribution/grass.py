@@ -148,6 +148,16 @@ class GrassPipeline:
 
         self._featurize = jax.jit(featurize)
 
+    def sketch_lowering(self):
+        """The ``kernels.lowering.Lowering`` record of one featurize-chunk
+        sketch launch — how the sparsify→sketch step actually runs (fused
+        gather or materialized, which kernel, which tile).  ``None`` for
+        sketch families without a FlashSketch kernel (they run as plain
+        XLA ops).  Inspect with ``.describe()`` or price it with
+        ``repro.engine.cost_of``."""
+        return self.sketch.lowering_for(max(1, self.cfg.chunk),
+                                        gather=self.cfg.fused)
+
     # ---------------------------------------------------------------- cache
     def build_cache(self, x_train, y_train, batch: int = 256) -> Tuple[jnp.ndarray, float]:
         """Feature cache Φ ∈ (n_train, k); returns (cache, sketch_seconds).

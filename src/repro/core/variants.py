@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core import hashing
 from repro.core.blockperm import BlockPermPlan, make_plan
+from repro.kernels import lowering as klowering
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.roofline import sketch_model
@@ -76,6 +77,12 @@ class SketchBase:
 
     def cost_model(self, n: int) -> CostModel:
         raise NotImplementedError
+
+    def lowering_for(self, n: int, **spec_kwargs):
+        """The ``kernels.lowering.Lowering`` this family would launch for
+        a width-``n`` apply, or ``None`` for families without a FlashSketch
+        kernel (dense/SJLT/SRHT baselines run as plain XLA ops)."""
+        return None
 
     def describe(self) -> str:
         return f"{self.name}(d={self.d}, k={self.k})"
@@ -247,9 +254,25 @@ class BlockPermSketch(SketchBase):
     def apply_t(self, Y):
         return kops.sketch_apply_t(self.plan, Y, self.impl)
 
+    def lowering_for(self, n: int, **spec_kwargs):
+        """The Lowering record of this family's width-``n`` apply.
+
+        For cost modeling the request pins the kernel GENERATION the
+        family stands for (``pallas_v1`` for the v1 family, ``pallas``
+        otherwise) rather than the backend-dependent ``self.impl`` — the
+        modeled hardware is a TPU even when the host traces on CPU.  Any
+        downgrade (e.g. v2 → v1 on VMEM overflow) is resolved by the
+        engine and lands in the record, so ``cost_model`` charges what
+        would actually launch.
+        """
+        impl = spec_kwargs.pop(
+            "impl",
+            "pallas_v1" if self.kernel_version == "v1" else "pallas")
+        return klowering.lower(self.plan, klowering.LaunchSpec(
+            op="fwd", n=n, impl=impl, **spec_kwargs))
+
     def cost_model(self, n: int) -> CostModel:
-        kc = sketch_model.kernel_cost(self.plan, n,
-                                      version=self.kernel_version)
+        kc = sketch_model.cost_of(self.lowering_for(n))
         return CostModel(
             # MXU one-hot contraction FLOPs (TPU adaptation); the *useful*
             # scatter flops are 2·κs·d·n — both are below the memory term.
@@ -310,6 +333,11 @@ class BlockRowSketch(SketchBase):
     def apply_gather(self, A, row_index):
         return kops.blockrow_apply(self.plan, A, self.impl,
                                    row_index=row_index)
+
+    def lowering_for(self, n: int, **spec_kwargs):
+        impl = spec_kwargs.pop("impl", "pallas")
+        return klowering.lower(self.plan, klowering.LaunchSpec(
+            op="blockrow", n=n, impl=impl, **spec_kwargs))
 
     def cost_model(self, n: int) -> CostModel:
         p = self.plan

@@ -39,13 +39,15 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import hashing
-from repro.core.blockperm import (MIN_TILE_N, VMEM_BUDGET_BYTES,
-                                  BlockPermPlan, fused_variant_bytes,
-                                  make_plan)
+from repro.core.blockperm import BlockPermPlan, make_plan
 from repro.kernels import flashsketch as fsk
+from repro.kernels import lowering
 from repro.kernels import ops
 from repro.kernels import ref as kref
-from repro.kernels import tune
+
+# The VMEM predicate is single-sourced in the lowering engine (shared with
+# ops dispatch); re-exported here because it is part of this package's API.
+partial_fits_vmem = lowering.partial_fits_vmem
 
 
 def shard_count(mesh, axis: str) -> int:
@@ -150,17 +152,6 @@ def _phi_pairs(plan: BlockPermPlan, g_of_m: jnp.ndarray,
     return phi
 
 
-def partial_fits_vmem(plan: BlockPermPlan, tn: int) -> bool:
-    """Whether the partial kernel's working set fits the VMEM budget at
-    tile width ``tn``: one (B_r, B_c) Φ scratch + one double-buffered
-    pipelined input view + the output tile — exactly the κ=1 fused-fwd
-    footprint (the per-ℓ grid carries ONE Φ tile and ONE input block per
-    program, regardless of the plan's κ)."""
-    return fused_variant_bytes(1, plan.Br, plan.Bc, tn,
-                               plan.stream_itemsize,
-                               "fwd") <= VMEM_BUDGET_BYTES
-
-
 def _partial_oracle(plan: BlockPermPlan, slab: jnp.ndarray,
                     tables: jnp.ndarray,
                     rows_pattern: bool = False) -> jnp.ndarray:
@@ -233,33 +224,27 @@ def local_partial_apply(
     M_loc = slab.shape[0] // plan.Bc
     n = slab.shape[1]
     tables = partial_tables(plan, lo, M_loc, rows_pattern)
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
-    if impl == "pallas":
-        if tn is None:
-            tn = tune.resolve_tn(plan, n,
-                                 "blockrow" if rows_pattern else "fwd")
-        # mirror ops' VMEM-overflow fallback: shrink the tile first, and
-        # if the (Br, Bc) Φ tile alone busts the budget no tile width can
-        # save the kernel — fall back to the jnp oracle partial (there is
-        # no v1 partial formulation)
-        while tn > MIN_TILE_N and not partial_fits_vmem(plan, tn):
-            tn //= 2
-        if not partial_fits_vmem(plan, tn):
-            impl = "xla"
-    if impl == "xla":
+    if impl not in ("auto", "pallas", "xla"):
+        raise ValueError(
+            f"impl must be 'auto', 'pallas' or 'xla', got {impl!r}")
+    # The launch decision — impl dispatch, tile resolution, the
+    # shrink-then-oracle VMEM fallback — comes from the SAME lowering
+    # engine as the single-device ops entry points (shard="row" selects
+    # the partial formulation); only the shard_map plumbing lives here.
+    lw = lowering.lower(plan, lowering.LaunchSpec(
+        op="blockrow" if rows_pattern else "fwd", n=n, impl=impl, tn=tn,
+        shard="row", devices=plan.M // M_loc))
+    if lw.impl == "xla":
         # match ops' xla path: the oracle sees the stream-rounded input
         slab32 = slab.astype(jnp.float32)
         if plan.dtype != "float32":
             slab32 = slab32.astype(plan.stream_dtype).astype(jnp.float32)
         parts = _partial_oracle(plan, slab32, tables, rows_pattern)
-    elif impl == "pallas":
-        padded, _ = ops._pad_cols(slab, tn)
-        parts = fsk.flashsketch_pallas_partial(
-            plan, padded, tables, tn=tn, rows_pattern=rows_pattern)[:, :, :n]
     else:
-        raise ValueError(
-            f"impl must be 'auto', 'pallas' or 'xla', got {impl!r}")
+        # ragged n is handled in-kernel — the slab is never column-padded
+        parts = fsk.flashsketch_pallas_partial(
+            plan, slab, tables, tn=lw.tn,
+            rows_pattern=rows_pattern)[:, :, :n]
     if rows_pattern:
         return parts                                      # already global
     # scatter the compact owned-pair rows into the zero global layout —

@@ -4,8 +4,13 @@
                    transpose/blockrow) with VMEM Φ caching and a
                    mixed-precision streaming path; v1 grid-reduction
                    kernels kept as the equivalence/benchmark baseline
-  ops.py         — jit'd public wrappers with padding, impl dispatch,
-                   dtype knob + custom_vjp
-  tune.py        — tile autotuner (tn and M/Br sweeps, shape-keyed cache)
+  lowering.py    — THE launch-decision layer: lower(plan, spec) resolves
+                   impl/tile/dtype/gather/batch/shard into one frozen
+                   Lowering record; execute() runs it; explain() prints
+                   the decision trace (re-exported as repro.engine)
+  ops.py         — jit'd public wrappers: thin custom_vjp shells around
+                   lowering.lower + lowering.execute
+  tune.py        — tile autotuner (tn and M/Br sweeps, shape-keyed cache;
+                   one cache_key builder for all readers and writers)
   ref.py         — pure-jnp oracles (ground truth for tests)
 """

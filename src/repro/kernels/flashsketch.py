@@ -408,7 +408,13 @@ def _compiler_params(interpret: bool, semantics):
 
 def _run_v1(plan, kernel, tab, operand, in_block, out_block, out_rows, n, tn,
             interpret):
-    grid = (n // tn, plan.M, plan.kappa)
+    """v1 launcher.  ``n`` may be ragged (``n % tn != 0``): the grid covers
+    ⌈n/tn⌉ column tiles and the edge tile is handled by the Pallas
+    machinery itself (masked loads/stores on TPU, internal pad+slice in
+    interpret mode).  The contraction is column-local, so edge-tile
+    garbage never leaks into valid columns — the operand is NEVER padded
+    at trace level (no HBM copy of A just to round n up)."""
+    grid = (-(-n // tn), plan.M, plan.kappa)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -435,8 +441,15 @@ def _run_fused(plan, kernel, tab, operand, in_block, out_block, phi_shape,
     The same operand is passed κ times — each view has its own BlockSpec whose
     index_map picks input block ``tab[ℓ, ·]``, so the pipeline prefetches all
     κ gathered blocks for program (g, j) without any HBM-side gather copy.
+
+    ``n`` may be ragged (``n % tn != 0``): the grid covers ⌈n/tn⌉ column
+    tiles and the edge tile rides the Pallas machinery (masked loads/stores
+    on TPU, internal pad+slice in interpret mode).  Output columns of the
+    edge tile beyond ``n`` are garbage but are dropped by the machinery;
+    the contraction is column-local so valid columns are untouched.  The
+    operand is NEVER column-padded at trace level.
     """
-    grid = (plan.M, n // tn)
+    grid = (plan.M, -(-n // tn))
     cdt = operand.dtype
 
     def _gather_map(ell):
@@ -507,12 +520,12 @@ def flashsketch_pallas(
     tn: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Y = S A via the fused v2 kernel. A must be (d_pad, n) with n % tn == 0."""
+    """Y = S A via the fused v2 kernel. A must be (d_pad, n); n may be
+    ragged (the ⌈n/tn⌉ edge tile is handled by the Pallas machinery)."""
     if interpret is None:
         interpret = _should_interpret()
     d_pad, n = A.shape
     assert d_pad == plan.d_pad, (d_pad, plan.d_pad)
-    assert n % tn == 0, (n, tn)
     kernel = functools.partial(
         _fused_fwd_kernel, plan=plan, scale=plan.scale, phi_fn=_phi_tile
     )
@@ -531,12 +544,11 @@ def flashsketch_transpose_pallas(
     tn: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """X = Sᵀ Y via the fused v2 kernel. Y must be (k_pad, n) with n % tn == 0."""
+    """X = Sᵀ Y via the fused v2 kernel. Y must be (k_pad, n); ragged n ok."""
     if interpret is None:
         interpret = _should_interpret()
     k_pad, n = Y.shape
     assert k_pad == plan.k_pad, (k_pad, plan.k_pad)
-    assert n % tn == 0, (n, tn)
     kernel = functools.partial(_fused_transpose_kernel, plan=plan, scale=plan.scale)
     return _run_fused(
         plan, kernel, _inv_neighbor_table(plan), _stream(plan, Y),
@@ -563,7 +575,7 @@ def flashsketch_pallas_gather(
         copied).  Stays in HBM; the kernel DMAs only the masked rows.
       row_map: ``(d_pad,)`` int32 — source row of A feeding each padded
         masked row.  Entries beyond ``plan.d`` may point at any valid row
-        (``ops._row_map_for`` uses 0); the kernel zeroes those gather-
+        (``lowering.row_map_for`` uses 0); the kernel zeroes those gather-
         scratch rows before the contraction.
 
     Returns:
@@ -621,12 +633,11 @@ def blockrow_pallas(
     tn: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """FLASHBLOCKROW forward via the fused v2 kernel. A: (d_pad, n), n % tn == 0."""
+    """FLASHBLOCKROW forward via the fused v2 kernel. A: (d_pad, n); ragged n ok."""
     if interpret is None:
         interpret = _should_interpret()
     d_pad, n = A.shape
     assert d_pad == plan.d_pad
-    assert n % tn == 0
     h_np = _blockrow_table(plan)                            # (κ, M) static
     scale = plan.scale * math.sqrt(plan.d_pad / plan.k_pad)
     kernel = functools.partial(
@@ -654,8 +665,10 @@ def flashsketch_pallas_partial(
     Args:
       plan: the frozen GLOBAL plan (full M-block grid).
       A_local: ``(M_loc·B_c, n)`` slab of the padded input owned by this
-        device (a contiguous range of ``M_loc`` of the M input blocks),
-        ``n % tn == 0``.  Streamed in ``plan.stream_dtype``.
+        device (a contiguous range of ``M_loc`` of the M input blocks);
+        ``n`` may be ragged (``n % tn != 0`` — the edge column tile rides
+        the Pallas machinery, the slab is never column-padded).  Streamed
+        in ``plan.stream_dtype``.
       tables: from ``repro.distributed.sharded_apply.partial_tables`` —
         ``(2, κ, M_loc)`` int32 ``[global g, global h]`` for the default
         COMPACT owned-pair kernel, or ``(3, κ, M)`` ``[local gather index,
@@ -678,15 +691,15 @@ def flashsketch_pallas_partial(
         interpret = _should_interpret()
     rows_loc, n = A_local.shape
     assert rows_loc % plan.Bc == 0, (rows_loc, plan.Bc)
-    assert n % tn == 0, (n, tn)
     M_loc = rows_loc // plan.Bc
     assert plan.M % M_loc == 0, (plan.M, M_loc)
+    n_tiles = -(-n // tn)
     operand = _stream(plan, A_local)
     if rows_pattern:
         assert tables.shape == (3, plan.kappa, plan.M), tables.shape
         kernel = functools.partial(
             _partial_masked_kernel, plan=plan, phi_fn=_phi_rows_tile)
-        grid = (plan.M, plan.kappa, n // tn)
+        grid = (plan.M, plan.kappa, n_tiles)
         in_spec = pl.BlockSpec(
             (plan.Bc, tn), lambda g, l, j, tab_ref: (tab_ref[0, l, g], j))
         out_rows = plan.k_pad
@@ -695,7 +708,7 @@ def flashsketch_pallas_partial(
         assert tables.shape == (2, plan.kappa, M_loc), tables.shape
         kernel = functools.partial(
             _partial_fwd_kernel, plan=plan, phi_fn=_phi_tile)
-        grid = (M_loc, plan.kappa, n // tn)
+        grid = (M_loc, plan.kappa, n_tiles)
         in_spec = pl.BlockSpec(
             (plan.Bc, tn), lambda m, l, j, tab_ref: (m, j))
         out_rows = M_loc * plan.Br
@@ -789,12 +802,11 @@ def flashsketch_pallas_v1(
     tn: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Y = S A via the v1 grid-reduction kernel (fp32 only)."""
+    """Y = S A via the v1 grid-reduction kernel (fp32 only; ragged n ok)."""
     if interpret is None:
         interpret = _should_interpret()
     d_pad, n = A.shape
     assert d_pad == plan.d_pad, (d_pad, plan.d_pad)
-    assert n % tn == 0, (n, tn)
     kernel = functools.partial(_fwd_kernel_v1, plan=plan, scale=plan.scale)
     return _run_v1(
         plan, kernel, _fwd_neighbor_table(plan), A,
@@ -810,12 +822,11 @@ def flashsketch_transpose_pallas_v1(
     tn: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """X = Sᵀ Y via the v1 grid-reduction kernel (fp32 only)."""
+    """X = Sᵀ Y via the v1 grid-reduction kernel (fp32 only; ragged n ok)."""
     if interpret is None:
         interpret = _should_interpret()
     k_pad, n = Y.shape
     assert k_pad == plan.k_pad, (k_pad, plan.k_pad)
-    assert n % tn == 0, (n, tn)
     kernel = functools.partial(_transpose_kernel_v1, plan=plan, scale=plan.scale)
     return _run_v1(
         plan, kernel, _inv_neighbor_table(plan), Y,
@@ -831,12 +842,12 @@ def blockrow_pallas_v1(
     tn: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """FLASHBLOCKROW forward via the v1 grid-reduction kernel (fp32 only)."""
+    """FLASHBLOCKROW forward via the v1 grid-reduction kernel (fp32 only;
+    ragged n ok)."""
     if interpret is None:
         interpret = _should_interpret()
     d_pad, n = A.shape
     assert d_pad == plan.d_pad
-    assert n % tn == 0
     h_np = _blockrow_table(plan)                            # (κ, M) static
     scale = plan.scale * math.sqrt(plan.d_pad / plan.k_pad)
     kernel = functools.partial(_blockrow_kernel_v1, plan=plan, scale=scale)

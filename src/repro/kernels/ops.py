@@ -17,6 +17,15 @@ dispatch, tile selection, and differentiation:
     ``None`` uses the plan-level knob.  bf16 streams the input at half the
     HBM traffic while accumulating in fp32 (robust per Jeendgar et al.).
 
+Every entry point here is a THIN shell: all resolution — impl dispatch and
+downgrades, tile selection, VMEM budgeting, the gather-fuse-or-materialize
+decision, padding — lives in ``kernels.lowering``.  Each call builds one
+``lowering.LaunchSpec``, resolves it with ``lowering.lower`` (memoized,
+trace-time safe) and runs ``lowering.execute`` on the operands; the
+``custom_vjp`` wiring below is the only logic this module owns.  Inspect
+any launch decision with ``lowering.explain(plan, n=..., ...)`` or the
+``tools/explain_lowering.py`` CLI.
+
 The VJP of ``Y = S A`` w.r.t. ``A`` is ``Sᵀ dY`` — the transpose kernel —
 so sketching composes with ``jax.grad`` (needed when the sketch sits inside
 a training graph, e.g. sketched gradient compression with error feedback).
@@ -29,6 +38,13 @@ custom_vjp primitive; its VJP scatters ``Sᵀ dY`` back into the masked
 rows).  ``sketch_apply_batched`` folds a stack of matrices into the column
 axis of that same single launch, so a B-example batch of sparsified
 gradients is sketched at full tile width instead of B skinny launches.
+
+Ragged ``n`` (``n`` not a multiple of the tile) is handled IN-KERNEL on
+every path — the edge column tile rides the Pallas machinery (masked
+loads/stores on TPU, internal pad+slice in interpret mode) and the gather
+kernels clip their row DMAs — so no entry point ever materializes a
+column-padded copy of the operand (regression-tested structurally: the
+jaxpr contains no ``pad`` of the operand's column axis).
 """
 from __future__ import annotations
 
@@ -39,71 +55,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blockperm import BlockPermPlan
-from repro.kernels import flashsketch as fsk
-from repro.kernels import ref as kref
-from repro.kernels import tune
+from repro.kernels import lowering
 
 Impl = Literal["auto", "pallas", "pallas_v1", "xla"]
 
-_PALLAS_IMPLS = ("pallas", "pallas_v1")
 
-
-def _resolve_impl(impl: Impl) -> str:
-    if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    if impl not in ("xla",) + _PALLAS_IMPLS:
-        raise ValueError(
-            f"impl must be one of ('auto', 'pallas', 'pallas_v1', 'xla'), "
-            f"got {impl!r}")
-    return impl
-
-
-def _resolve_pallas(impl: str, plan: BlockPermPlan, n: int, variant: str) -> str:
-    """Downgrade v2 → v1 when the fused Φ scratch cannot fit VMEM.
-
-    The stacked Φ is (Br, κ·Bc), independent of the tile width, so huge
-    d_pad/M plans must use the revisiting kernel on real hardware.  (In
-    interpret mode there is no VMEM, but dispatch stays consistent so the
-    two backends run the same kernel for a given shape.)
-    """
-    if impl == "pallas" and not tune.fused_fits_vmem(plan, n, variant):
-        return "pallas_v1"
-    return impl
-
-
-def _resolve_plan(plan: BlockPermPlan, dtype: Optional[str]) -> BlockPermPlan:
-    if dtype is None or dtype == plan.dtype:
-        return plan
-    return plan.with_dtype(dtype)
-
-
-def _resolve_tn(tn: Optional[int], plan: BlockPermPlan, n: int, variant: str,
-                impl: str = "pallas") -> int:
-    if tn is None:
-        if impl == "pallas_v1":
-            # v1's working set is one block pair + the Φ tile — the v2
-            # VMEM heuristic would pick a degenerate tile here.
-            return tune.v1_default_tn(plan, n)
-        return tune.resolve_tn(plan, n, variant)
-    if tn < 1:
-        raise ValueError(f"tn must be >= 1, got {tn}")
-    return tn
-
-
-def _pad_cols(A: jnp.ndarray, tn: int) -> tuple[jnp.ndarray, int]:
-    n = A.shape[1]
-    n_pad = ((n + tn - 1) // tn) * tn
-    if n_pad != n:
-        A = jnp.pad(A, ((0, 0), (0, n_pad - n)))
-    return A, n
-
-
-def _emulate_stream(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
-    """Round through the streaming dtype so the XLA oracle sees the same
-    input precision the Pallas bf16 path streams from HBM."""
-    if plan.dtype == "float32":
-        return A
-    return A.astype(plan.stream_dtype).astype(jnp.float32)
+def _lower(plan: BlockPermPlan, op: str, n: int, impl: Impl,
+           tn: Optional[int], dtype: Optional[str], *,
+           gather: bool = False, batch: int = 1) -> lowering.Lowering:
+    return lowering.lower(plan, lowering.LaunchSpec(
+        op=op, n=n, impl=impl, tn=tn, dtype=dtype, gather=gather,
+        batch=batch))
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3, 4))
@@ -137,8 +99,10 @@ def sketch_apply(
         ``row_index`` the row count is instead the source dim ``d_src``.
       impl: ``"auto"`` (pallas on TPU, xla elsewhere), ``"pallas"`` (v2
         fused-κ kernel; silently downgrades to v1 if the fused Φ scratch
-        cannot fit VMEM), ``"pallas_v1"`` (κ-grid-reduction baseline), or
-        ``"xla"`` (pure-jnp oracle).  Anything else raises ``ValueError``.
+        cannot fit VMEM — the downgrade and its reason are recorded on the
+        ``lowering.Lowering`` record), ``"pallas_v1"`` (κ-grid-reduction
+        baseline), or ``"xla"`` (pure-jnp oracle).  Anything else raises
+        ``ValueError``.
       tn: column-tile width for the Pallas paths; ``None`` defers to the
         autotuner cache (trace-time lookup).  Ignored by ``"xla"``.
       dtype: streaming-precision override, ``"float32"`` or ``"bfloat16"``;
@@ -161,22 +125,8 @@ def sketch_apply(
 
 
 def _sketch_apply_impl(plan, A, impl, tn, dtype):
-    plan = _resolve_plan(plan, dtype)
-    impl = _resolve_impl(impl)
-    if impl == "xla":
-        return kref.flashsketch_ref(plan, _emulate_stream(plan, A))
-    assert impl in _PALLAS_IMPLS, impl
-    Ap = kref.pad_input(plan, A)
-    impl = _resolve_pallas(impl, plan, Ap.shape[1], "fwd")
-    tn = _resolve_tn(tn, plan, Ap.shape[1], "fwd", impl)
-    Ap, n = _pad_cols(Ap, tn)
-    if impl == "pallas_v1":
-        # v1 computes in fp32; keep the plan's streaming-precision contract
-        # by rounding the input exactly as the bf16 stream would.
-        Y = fsk.flashsketch_pallas_v1(plan, _emulate_stream(plan, Ap), tn=tn)
-    else:
-        Y = fsk.flashsketch_pallas(plan, Ap, tn=tn)
-    return Y[: plan.k, :n]
+    lw = _lower(plan, "fwd", A.shape[1], impl, tn, dtype)
+    return lowering.execute(lw, A)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3, 4))
@@ -232,22 +182,8 @@ def sketch_apply_t(
 
 
 def _sketch_apply_t_impl(plan, Y, impl, tn, dtype):
-    plan = _resolve_plan(plan, dtype)
-    impl = _resolve_impl(impl)
-    if impl == "xla":
-        return kref.flashsketch_transpose_ref(plan, _emulate_stream(plan, Y))
-    assert impl in _PALLAS_IMPLS, impl
-    Yp = Y
-    if Y.shape[0] != plan.k_pad:
-        Yp = jnp.pad(Y, ((0, plan.k_pad - Y.shape[0]), (0, 0)))
-    impl = _resolve_pallas(impl, plan, Yp.shape[1], "transpose")
-    tn = _resolve_tn(tn, plan, Yp.shape[1], "transpose", impl)
-    Yp, n = _pad_cols(Yp, tn)
-    if impl == "pallas_v1":
-        X = fsk.flashsketch_transpose_pallas_v1(plan, _emulate_stream(plan, Yp), tn=tn)
-    else:
-        X = fsk.flashsketch_transpose_pallas(plan, Yp, tn=tn)
-    return X[: plan.d, :n]
+    lw = _lower(plan, "transpose", Y.shape[1], impl, tn, dtype)
+    return lowering.execute(lw, Y)
 
 
 def _apply_fwd(plan, A, impl, tn, dtype):
@@ -274,69 +210,9 @@ _sketch_apply_t_vjp.defvjp(_apply_t_fwd, _apply_t_bwd)
 # Gather-fused apply: Y = S @ A[row_index, :] in one launch.
 # ---------------------------------------------------------------------------
 
-def _row_map_for(plan: BlockPermPlan, row_index: jnp.ndarray) -> jnp.ndarray:
-    """(d_pad,) int32 source-row map.  Padding entries point at row 0 — a
-    placeholder valid source; the gather kernel zeroes the corresponding
-    scratch rows itself (rows ≥ ``plan.d``), so A is never copied just to
-    host a zero row and padding still contributes exact zeros."""
-    ri = jnp.asarray(row_index, jnp.int32).reshape(-1)
-    pad = plan.d_pad - ri.shape[0]
-    if pad == 0:
-        return ri
-    return jnp.concatenate([ri, jnp.zeros((pad,), jnp.int32)])
-
-
-def _apply_gather_path(plan, A, row_index, impl, tn, dtype, *, variant,
-                       gather_kernel, oracle, materialized_apply):
-    """Shared gather dispatch for the ``row_index=`` forward paths.
-
-    One copy of the protocol — mask-length check, xla oracle, the
-    materializing fallback (v1 / VMEM overflow), tile resolution, column
-    padding, zero-row append, row-map construction, output slice — so the
-    fwd and blockrow gather entries cannot silently diverge.
-
-    Args:
-      variant: tuner/VMEM shape-class name (``"fwd_gather"`` /
-        ``"blockrow_gather"``).
-      gather_kernel: ``fsk.*_pallas_gather(plan, Az, rmap, tn=)``.
-      oracle: pure-jnp reference taking the materialized gather.
-      materialized_apply: fallback on ``A[row_index]`` when no fused
-        gather kernel applies (``pallas_v1``, or the Φ scratch overflows
-        VMEM at the smallest tile).
-    """
-    plan = _resolve_plan(plan, dtype)
-    impl = _resolve_impl(impl)
-    d_keep = row_index.shape[0]
-    if d_keep != plan.d:
-        raise ValueError(
-            f"row_index has {d_keep} entries but plan.d == {plan.d}; build "
-            f"the plan for the masked dim (make_plan(d_keep, k, ...))")
-    if impl == "xla":
-        return oracle(plan, _emulate_stream(plan, A[row_index]))
-    assert impl in _PALLAS_IMPLS, impl
-    n = A.shape[1]
-    if impl == "pallas_v1" or not tune.fused_fits_vmem(plan, n, variant):
-        return materialized_apply(A[row_index], impl)
-    if tn is None:
-        tn = tune.resolve_tn(plan, n, variant)
-    # A is deliberately NOT column-padded here — a ragged last tile is
-    # zero-filled inside the gather kernel.  Padding the (d_src, n) HBM
-    # operand would materialize a full copy of A, breaking the path's
-    # no-A-copy contract (only the small (k, ·) output is tile-padded).
-    rmap = _row_map_for(plan, row_index)
-    Y = gather_kernel(plan, A, rmap, tn=tn)
-    return Y[: plan.k, :n]
-
-
 def _sketch_apply_indexed_impl(plan, A, row_index, impl, tn, dtype):
-    return _apply_gather_path(
-        plan, A, row_index, impl, tn, dtype,
-        variant="fwd_gather",
-        gather_kernel=fsk.flashsketch_pallas_gather,
-        oracle=kref.flashsketch_ref,
-        materialized_apply=lambda Am, im: _sketch_apply_impl(
-            plan, Am, im, tn, dtype),
-    )
+    lw = _lower(plan, "fwd", A.shape[1], impl, tn, dtype, gather=True)
+    return lowering.execute(lw, A, row_index=row_index)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 3, 4, 5))
@@ -366,7 +242,8 @@ def sketch_apply_indexed(
       impl / tn / dtype: as in ``sketch_apply``.  ``"xla"`` runs the
         materializing oracle ``flashsketch_ref(plan, A[row_index])``;
         ``"pallas_v1"`` (and the VMEM fallback) materialize the gather and
-        use the regular kernels.
+        use the regular kernels — the ``lowering.Lowering`` record keeps
+        ``gather_fused=False`` plus the reason.
 
     Returns:
       ``(k, n)`` fp32 array.  Differentiable in ``A``: the VJP scatters
@@ -421,49 +298,18 @@ def blockrow_apply(
     Returns:
       ``(k, n)`` fp32 array.
     """
-    if row_index is not None:
-        return _apply_gather_path(
-            plan, A, row_index, impl, tn, dtype,
-            variant="blockrow_gather",
-            gather_kernel=fsk.blockrow_pallas_gather,
-            oracle=kref.blockrow_ref,
-            materialized_apply=lambda Am, im: blockrow_apply(
-                plan, Am, im, tn, dtype),
-        )
-    plan = _resolve_plan(plan, dtype)
-    impl = _resolve_impl(impl)
-    if impl == "xla":
-        return kref.blockrow_ref(plan, _emulate_stream(plan, A))
-    assert impl in _PALLAS_IMPLS, impl
-    Ap = kref.pad_input(plan, A)
-    impl = _resolve_pallas(impl, plan, Ap.shape[1], "blockrow")
-    tn = _resolve_tn(tn, plan, Ap.shape[1], "blockrow", impl)
-    Ap, n = _pad_cols(Ap, tn)
-    if impl == "pallas_v1":
-        Y = fsk.blockrow_pallas_v1(plan, _emulate_stream(plan, Ap), tn=tn)
-    else:
-        Y = fsk.blockrow_pallas(plan, Ap, tn=tn)
-    return Y[: plan.k, :n]
+    lw = _lower(plan, "blockrow", A.shape[1], impl, tn, dtype,
+                gather=row_index is not None)
+    return lowering.execute(lw, A, row_index=row_index)
 
 
-def _resolve_batched_tn(plan, impl, dtype, n: int, n_batch: int,
-                        row_index) -> Optional[int]:
-    """Trace-time tile width for a batch-folded launch (shared by
-    ``sketch_apply_batched`` and ``sketch_vectors`` so the two batch entry
-    points resolve tiles identically).
-
-    Resolves against the autotuner's BATCHED shape class
-    (``tune.resolve_tn(..., batch=n_batch)``) — but only when the launch
-    will actually be the fused v2 kernel; v1 dispatch (explicit or the
-    VMEM-overflow downgrade) must keep ``tn=None`` so the downstream
-    ``_resolve_tn`` applies ``v1_default_tn``, not the v2 heuristic.
-    """
-    eff_plan = _resolve_plan(plan, dtype)
-    variant = "fwd" if row_index is None else "fwd_gather"
-    if (_resolve_impl(impl) == "pallas"
-            and tune.fused_fits_vmem(eff_plan, n * n_batch, variant)):
-        return tune.resolve_tn(eff_plan, n, variant, batch=n_batch)
-    return None
+def _lower_batched(plan, op, n, impl, tn, dtype, n_batch, gather):
+    """One batch-aware lowering shared by the two batch entry points, so
+    ``sketch_vectors`` and ``sketch_apply_batched`` resolve the identical
+    launch (same tuner shape class, same downgrade ladder)."""
+    return lowering.lower(plan, lowering.LaunchSpec(
+        op=op, n=n, impl=impl, tn=tn, dtype=dtype, gather=gather,
+        batch=n_batch))
 
 
 def sketch_vectors(plan: BlockPermPlan, x: jnp.ndarray, impl: Impl = "auto",
@@ -482,7 +328,8 @@ def sketch_vectors(plan: BlockPermPlan, x: jnp.ndarray, impl: Impl = "auto",
       tn / dtype: forwarded to ``sketch_apply``.  ``tn=None`` resolves
         against the autotuner's *batched* shape class exactly as
         ``sketch_apply_batched`` does (each vector is a width-1 matrix,
-        the batch is folded into the column axis).
+        the batch is folded into the column axis) — both entry points
+        share ``_lower_batched``.
       row_index: optional ``(plan.d,)`` int rows — fused
         ``S x[..., row_index]`` (the GraSS sparsify→sketch fusion).
 
@@ -492,8 +339,8 @@ def sketch_vectors(plan: BlockPermPlan, x: jnp.ndarray, impl: Impl = "auto",
     """
     flat = x.reshape(-1, x.shape[-1])                 # (n, d)
     if tn is None:
-        tn = _resolve_batched_tn(plan, impl, dtype, 1, flat.shape[0],
-                                 row_index)
+        tn = _lower_batched(plan, "fwd", 1, impl, tn, dtype, flat.shape[0],
+                            row_index is not None).tn
     Y = sketch_apply(plan, flat.T, impl, tn, dtype,
                      row_index=row_index)             # (k, n)
     return Y.T.reshape(*x.shape[:-1], plan.k)
@@ -520,7 +367,7 @@ def sketch_apply_batched(
         scratch is built once per launch and reused across the whole batch.
       impl / tn / dtype: forwarded to ``sketch_apply`` (same valid values).
         ``tn=None`` resolves against the autotuner's *batched* shape class
-        (``tune.resolve_tn(..., batch=B)``), not the per-matrix width.
+        (``batch=B`` on the ``LaunchSpec``), not the per-matrix width.
       row_index: optional ``(plan.d,)`` int rows shared by every batch
         element — fused ``S @ A[b][row_index, :]`` per element, still one
         launch (the GraSS per-example-gradient path).
@@ -538,7 +385,8 @@ def sketch_apply_batched(
     for b in batch:
         n_batch *= b
     if tn is None:
-        tn = _resolve_batched_tn(plan, impl, dtype, n, n_batch, row_index)
+        tn = _lower_batched(plan, "fwd", n, impl, tn, dtype, n_batch,
+                            row_index is not None).tn
     flat = jnp.moveaxis(A.reshape((-1, d, n)), 0, 1).reshape(d, -1)  # (d, B·n)
     Y = sketch_apply(plan, flat, impl, tn, dtype, row_index=row_index)
     Y = jnp.moveaxis(Y.reshape(plan.k, -1, n), 1, 0)                 # (k, B·n)

@@ -13,12 +13,18 @@ Two layers:
     measured winner.
 
 Cache entries are keyed by the *shape class* ``(backend, variant, d_pad,
-k_pad, M, Br, kappa, s, bucket(n), dtype)`` — ``n`` is bucketed to its next
-power of two so nearby column counts share a winner, and the backend tag
-("interpret" off-TPU) keeps interpreter timings from ever being served as
-compiled-TPU winners.  The cache is a process-global
+k_pad, M, Br, kappa, s, bucket(n), dtype, gather, bucket(batch))`` — ``n``
+is bucketed to its next power of two so nearby column counts share a
+winner, and the backend tag ("interpret" off-TPU) keeps interpreter
+timings from ever being served as compiled-TPU winners.  ``cache_key`` is
+the ONE key builder: every consult (``lookup``/``resolve_tn``) and every
+write (``autotune``, ``autotune_plan``) routes through it, including the
+batched fields — a write under one spelling of a batched shape is
+guaranteed visible to every reader.  The cache is a process-global
 dict with optional JSON persistence (``save_cache``/``load_cache``) so
-benchmark runs can ship winners to serving jobs.
+benchmark runs can ship winners to serving jobs; ``cache_generation()``
+counts mutations so trace-time consumers (the lowering engine's record
+cache) can invalidate when new winners land.
 """
 from __future__ import annotations
 
@@ -54,6 +60,21 @@ class TuneResult:
 
 
 _CACHE: Dict[Tuple, TuneResult] = {}
+
+# Bumped on every cache mutation (tuned win, JSON load, clear) so consumers
+# that memoize *derived* trace-time decisions — ``kernels.lowering``'s
+# record cache — know when a cached decision may have gone stale.
+_GENERATION: int = 0
+
+
+def cache_generation() -> int:
+    """Monotone counter of tuner-cache mutations (see module docstring)."""
+    return _GENERATION
+
+
+def _bump_generation() -> None:
+    global _GENERATION
+    _GENERATION += 1
 
 
 def _n_bucket(n: int) -> int:
@@ -94,6 +115,7 @@ def cache_key(plan: BlockPermPlan, n: int, variant: str,
 
 def clear_cache() -> None:
     _CACHE.clear()
+    _bump_generation()
 
 
 def cache_size() -> int:
@@ -117,25 +139,41 @@ def fused_fits_vmem(plan: BlockPermPlan, n: int, variant: str = "fwd") -> bool:
 
 
 def heuristic_tn(plan: BlockPermPlan, n: int, variant: str = "fwd",
-                 batch: int = 1) -> int:
+                 batch: int = 1, trace: Optional[list] = None) -> int:
     """Largest power-of-two tile width that fits the VMEM budget.
 
     Prefers ≥128 (TPU lane width) when the problem is wide enough; never
     exceeds the (power-of-two-rounded) effective column count ``n·batch``
     (a batched launch folds the batch into the column axis), so small
-    problems are not padded into oblivion.
+    problems are not padded into oblivion.  ``trace`` (a list, appended in
+    place) records every rejected candidate width for ``lowering.explain``.
     """
     cap = min(_MAX_TN, _n_bucket(n * max(1, batch)))
     tn = max(_MIN_TN, cap)
     while tn > _MIN_TN and _vmem_footprint(plan, tn, variant) > VMEM_BUDGET_BYTES:
+        if trace is not None:
+            trace.append(
+                f"tn={tn} rejected: {variant!r} working set "
+                f"{_vmem_footprint(plan, tn, variant)} B > VMEM budget "
+                f"{VMEM_BUDGET_BYTES} B")
         tn //= 2
     return tn
 
 
+def lookup(plan: BlockPermPlan, n: int, variant: str = "fwd",
+           batch: int = 1,
+           interpret: Optional[bool] = None) -> Optional[TuneResult]:
+    """The ONE cache consult: the tuned/loaded winner for this shape class,
+    or ``None``.  Every reader (``resolve_tn``, the lowering engine) and
+    every writer (``autotune``/``autotune_plan``) shares ``cache_key``, so
+    a batched write is never invisible to a batched read."""
+    return _CACHE.get(cache_key(plan, n, variant, interpret, batch=batch))
+
+
 def resolve_tn(plan: BlockPermPlan, n: int, variant: str = "fwd",
                batch: int = 1) -> int:
-    """Cache-or-heuristic tile width (the ``ops`` dispatch path, no timing)."""
-    hit = _CACHE.get(cache_key(plan, n, variant, batch=batch))
+    """Cache-or-heuristic tile width (the dispatch path, no timing)."""
+    hit = lookup(plan, n, variant, batch=batch)
     if hit is not None:
         return hit.tn
     return heuristic_tn(plan, n, variant, batch)
@@ -258,6 +296,7 @@ def autotune(
         best = TuneResult(tn=heuristic_tn(plan, n, variant, batch),
                           source="heuristic")
     _CACHE[key] = best
+    _bump_generation()
     return best
 
 
@@ -271,6 +310,7 @@ def autotune_plan(
     seed: int = 0,
     dtype: str = "float32",
     variant: str = "fwd",
+    batch: int = 1,
     block_rows_candidates: Optional[Iterable[int]] = None,
     tns: Optional[Sequence[int]] = None,
     warmup: int = 1,
@@ -287,6 +327,11 @@ def autotune_plan(
     more rows, different embedding — and raw launch time cannot rank it
     against the requested-size plans.  Such candidates are skipped, as are
     duplicates of an already-timed effective ``(M, B_r)`` grid.
+
+    ``batch`` is the batched-apply fold factor, forwarded to ``autotune``
+    and — crucially — to the winner's ``cache_key``, so a batched sweep's
+    winner is served back to batched ``resolve_tn``/``lookup`` consults
+    (one key builder for writers and readers; regression-tested).
     """
     base = make_plan(d, k, kappa=kappa, s=s, seed=seed, dtype=dtype)
     if block_rows_candidates is None:
@@ -309,14 +354,19 @@ def autotune_plan(
         if plan.k_pad != base.k_pad or (plan.M, plan.Br) in seen_grids:
             continue
         seen_grids.add((plan.M, plan.Br))
-        res = autotune(plan, n, variant, tns=tns, warmup=warmup, iters=iters)
+        res = autotune(plan, n, variant, batch=batch, tns=tns, warmup=warmup,
+                       iters=iters)
         if _is_better(res, best):
             best_plan, best = plan, dataclasses.replace(res, block_rows=plan.Br)
     if best_plan is None or best is None:
         best_plan = make_plan(d, k, kappa=kappa, s=s, seed=seed, dtype=dtype)
-        best = TuneResult(tn=resolve_tn(best_plan, n, variant),
+        best = TuneResult(tn=resolve_tn(best_plan, n, variant, batch),
                           block_rows=best_plan.Br, source="heuristic")
-    _CACHE[cache_key(best_plan, n, variant)] = best
+    # the winner's key MUST be built by the same cache_key spelling that
+    # resolve_tn/lookup consult — including the batched fields (a batched
+    # sweep cached under a batch-less key would never be served again)
+    _CACHE[cache_key(best_plan, n, variant, batch=batch)] = best
+    _bump_generation()
     return best_plan, best
 
 
@@ -352,4 +402,5 @@ def load_cache(path: str, *, merge: bool = True) -> int:
             time_us=float(t) if t is not None else float("nan"),
             source="loaded",
         )
+    _bump_generation()
     return len(payload)

@@ -145,6 +145,43 @@ def kernel_cost(
                       mxu_peak=peak)
 
 
+def cost_of(lw) -> KernelCost:
+    """Per-chip cost of a ``kernels.lowering.Lowering`` record.
+
+    THE bridge between dispatch and model: the terms are derived from the
+    record that actually launches — the resolved kernel generation
+    (``pallas_v1`` models v1, everything else the v2 formulation the
+    lowering would run on TPU), the resolved tile, the *launched* gather
+    organization (``gather_fused`` — a materialized fallback is charged as
+    the regular kernel it runs), the per-device workload under sharding —
+    so the model cannot drift from the kernel without the Lowering record
+    itself changing (which the golden-snapshot test turns into an explicit
+    diff).
+
+    Sharding: ``shard="row"`` routes to ``dist_sketch_cost`` (1/P compact
+    partial + ring psum); ``"col"``/``"batch"`` are collective-free and
+    charge the per-device slab (``n_loc``/``batch_loc``); ``"none"`` is
+    ``kernel_cost`` verbatim.  A row-sharded record downgraded to the jnp
+    oracle partial is still charged as the sharded ORGANIZATION (1/P slab
+    streams + the psum): the roofline describes the data movement of the
+    organization, and the oracle einsum moves the same slab — executor
+    overhead is out of the first-order model's scope.
+
+    Note: a ``tn=None`` record (the xla oracle) is charged at the default
+    128-wide tile — the modeled hardware is a TPU regardless of which
+    backend traced the lowering.
+    """
+    tn = lw.tn if lw.tn is not None else 128
+    if lw.shard == "row":
+        return dist_sketch_cost(lw.plan, lw.n_eff, lw.devices,
+                                variant=lw.op, tn=tn)
+    return kernel_cost(
+        lw.plan, lw.n_loc,
+        version=lw.version, variant=lw.op, tn=tn,
+        gather=lw.gather_fused, batch=lw.batch_loc,
+    )
+
+
 def modeled_speedup(
     plan: BlockPermPlan,
     n: int,

@@ -38,7 +38,7 @@ import jax.scipy.linalg as jsl
 
 from repro.configs import flashsketch_paper
 from repro.core.blockperm import BlockPermPlan, make_plan
-from repro.kernels import ops
+from repro.kernels import lowering, ops
 
 
 @dataclasses.dataclass
@@ -51,12 +51,17 @@ class SolveResult:
       relres:     final ``||A x - b|| / ||b||`` (recurrence estimate for
                   LSQR, recomputed exactly by the drivers that report it).
       converged:  whether ``relres <= tol`` was reached before the cap.
+      lowering:   the ``kernels.lowering.Lowering`` record of the sketch
+                  launch that built the preconditioner (``None`` for
+                  drivers that never sketched, e.g. plain ``lsqr``) — how
+                  the sketch actually ran: impl, tile, dtype, downgrades.
     """
 
     x: jnp.ndarray
     iterations: int
     relres: float
     converged: bool
+    lowering: Optional[object] = None
 
 
 def _identity(v):
@@ -399,7 +404,13 @@ def sketch_precondition_lstsq(
                          factorization=factorization)
     R = R.astype(b.dtype)
     if method == "lsqr":
-        return lsqr(A, b, R=R, tol=tol, max_iters=max_iters)
-    if method == "cg":
-        return pcg_normal(A, b, R, tol=tol, max_iters=max_iters)
-    raise ValueError(f"method must be 'lsqr' or 'cg', got {method!r}")
+        res = lsqr(A, b, R=R, tol=tol, max_iters=max_iters)
+    elif method == "cg":
+        res = pcg_normal(A, b, R, tol=tol, max_iters=max_iters)
+    else:
+        raise ValueError(f"method must be 'lsqr' or 'cg', got {method!r}")
+    # attach the record of how the sketch actually launched (trace-time
+    # metadata only — the engine memoizes, so this re-lower is free)
+    res.lowering = lowering.lower(
+        plan, lowering.LaunchSpec(op="fwd", n=n, impl=impl))
+    return res

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.blockperm import make_plan
-from repro.kernels import ops, tune
+from repro.kernels import lowering, ops, tune
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +148,58 @@ def test_gather_ragged_n_jaxpr_has_no_full_A_pad(rng):
     assert not offending, offending
 
 
+def _column_pads(jaxpr, n):
+    """pad eqns that widen a width-``n`` operand's column axis — the
+    padded-copy pattern the ragged-n fix removed."""
+    return [
+        e for e in _all_eqns(jaxpr)
+        if e.primitive.name == "pad"
+        and any(getattr(v.aval, "shape", (0, 0))[-1:] == (n,)
+                for v in e.invars)
+        and e.outvars[0].aval.shape[-1] > n
+    ]
+
+
+@pytest.mark.parametrize("impl", ["pallas", "pallas_v1"])
+def test_apply_ragged_n_jaxpr_has_no_column_pad(impl, rng):
+    """sketch_apply / sketch_apply_t / blockrow_apply at ragged n must not
+    materialize a column-padded copy of the operand (the remainder tile is
+    handled in-kernel, like the gather path).  d == d_pad here, so the
+    pallas fwd/blockrow traces contain no pad of the operand AT ALL."""
+    n = 33
+    plan = make_plan(256, 64, kappa=2, s=2, block_rows=8, seed=4)
+    assert plan.d == plan.d_pad                      # no row pad either
+    A = jnp.asarray(rng.normal(size=(256, n)), jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(plan.k, n)), jnp.float32)
+    for fn, op in [
+        (lambda X: ops.sketch_apply(plan, X, impl, 16), A),
+        (lambda X: ops.sketch_apply_t(plan, X, impl, 16), Y),
+        (lambda X: ops.blockrow_apply(plan, X, impl, 16), A),
+    ]:
+        jaxpr = jax.make_jaxpr(fn)(op)
+        offending = _column_pads(jaxpr.jaxpr, n)
+        assert not offending, offending
+
+
+@pytest.mark.parametrize("dtype", [None, "bfloat16"])
+@pytest.mark.parametrize("n", [33, 17, 7])
+def test_apply_ragged_n_matches_oracle(n, dtype, rng):
+    """Ragged-n v2/v1 launches agree with the xla oracle on every variant
+    (the in-kernel edge tile must be value-identical to the old padded
+    launch, whose outputs were sliced back to n)."""
+    plan = make_plan(256, 64, kappa=2, s=2, block_rows=8, seed=4)
+    A = jnp.asarray(rng.normal(size=(256, n)), jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(plan.k, n)), jnp.float32)
+    for fwd, op in [(ops.sketch_apply, A), (ops.sketch_apply_t, Y),
+                    (ops.blockrow_apply, A)]:
+        ref = fwd(plan, op, "xla", None, dtype)
+        for impl in ("pallas", "pallas_v1"):
+            got = fwd(plan, op, impl, 16, dtype)
+            assert got.shape == ref.shape
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       atol=1e-4, rtol=1e-4)
+
+
 def test_gather_ragged_n_vjp(rng):
     """The scatter VJP survives the ragged-tile path."""
     plan = make_plan(256, 64, kappa=2, s=2, block_rows=8, seed=4)
@@ -166,15 +218,16 @@ def test_gather_ragged_n_vjp(rng):
 # Fix 3: sketch_vectors == sketch_apply_batched tile resolution
 # ---------------------------------------------------------------------------
 
-def _record_resolve_tn(monkeypatch):
+def _record_lowerings(monkeypatch):
+    """Spy on the engine: every LaunchSpec resolved through lower()."""
     calls = []
-    orig = tune.resolve_tn
+    orig = lowering.lower
 
-    def spy(plan, n, variant="fwd", batch=1):
-        calls.append((n, variant, batch))
-        return orig(plan, n, variant, batch)
+    def spy(plan, spec):
+        calls.append(spec)
+        return orig(plan, spec)
 
-    monkeypatch.setattr(tune, "resolve_tn", spy)
+    monkeypatch.setattr(lowering, "lower", spy)
     return calls
 
 
@@ -189,14 +242,18 @@ def test_sketch_vectors_resolves_like_batched(use_gather, monkeypatch, rng):
     else:
         x = jnp.asarray(rng.normal(size=(B, 256)), jnp.float32)
         idx = None
-    calls = _record_resolve_tn(monkeypatch)
+    calls = _record_lowerings(monkeypatch)
     ops.sketch_vectors(plan, x, "pallas", row_index=idx)
-    v_call = calls[-1]
+    v_specs = [s for s in calls if s.batch > 1]
     calls.clear()
     ops.sketch_apply_batched(plan, x[:, :, None], "pallas", row_index=idx)
-    b_call = calls[-1]
-    # identical shape class: per-matrix width 1, batched over B, same variant
-    assert v_call == b_call == (1, "fwd_gather" if use_gather else "fwd", B)
+    b_specs = [s for s in calls if s.batch > 1]
+    # identical batched LaunchSpec: per-matrix width 1, batch folded over
+    # B, same gather flag — the two entry points CANNOT resolve different
+    # launches because they lower the same spec through the same engine
+    assert len(v_specs) == len(b_specs) == 1
+    assert v_specs[0] == b_specs[0] == lowering.LaunchSpec(
+        op="fwd", n=1, impl="pallas", gather=use_gather, batch=B)
 
 
 def test_sketch_vectors_threads_tn_and_dtype(rng):
@@ -220,13 +277,13 @@ def test_sketch_vectors_uses_batched_cache_winner(monkeypatch, rng):
     tune._CACHE[key] = tune.TuneResult(tn=16, time_us=1.0, source="tuned")
     try:
         seen = []
-        orig = ops._pad_cols
+        orig = lowering.execute
 
-        def spy(A, tn):
-            seen.append(tn)
-            return orig(A, tn)
+        def spy(lw, operand, row_index=None):
+            seen.append(lw.tn)
+            return orig(lw, operand, row_index=row_index)
 
-        monkeypatch.setattr(ops, "_pad_cols", spy)
+        monkeypatch.setattr(lowering, "execute", spy)
         x = jnp.asarray(rng.normal(size=(B, 256)), jnp.float32)
         ops.sketch_vectors(plan, x, "pallas")
         ops.sketch_apply_batched(plan, x[:, :, None], "pallas")
