@@ -155,6 +155,43 @@ def bench_multisketch(problems, *, cond: float, seed: int) -> List[Dict]:
     return rows
 
 
+def bench_guarded(problems, *, cond: float, seed: int,
+                  iters: int) -> List[Dict]:
+    """Guarded-solve rows: what the health layer costs on HEALTHY inputs.
+
+    Runs ``sketch_precondition_lstsq`` with and without ``guard=True`` on
+    the same problem and reports the overhead percentage plus the
+    HealthReport counters — on a well-posed problem the ladder must accept
+    draw #1 (attempts == 1) and the guards cost two Frobenius norms and a
+    diagonal scan.
+    """
+    rows: List[Dict] = []
+    for (d, n) in problems:
+        A_np, b_np, _ = make_ls_problem(d, n, cond, seed)
+        A, b = jnp.asarray(A_np), jnp.asarray(b_np)
+
+        def solve(guard):
+            return sketch_precondition_lstsq(A, b, seed=seed, tol=TOL,
+                                             max_iters=200, guard=guard)
+
+        t_plain = 1e6 * time_fn(lambda: solve(False).x, iters=iters)
+        t_guard = 1e6 * time_fn(lambda: solve(True).x, iters=iters)
+        res = solve(True)
+        rows.append(dict(
+            task="guarded_lstsq", d=d, n=n,
+            health_status=res.health.status,
+            attempts=res.health.attempts,
+            converged=res.converged, relres=res.relres,
+            guard_overhead_pct=100.0 * (t_guard - t_plain)
+            / max(t_plain, 1e-12),
+            health_counters=res.health.counters(),
+        ))
+        print(f"[{d}x{n}] guarded: status={res.health.status} "
+              f"attempts={res.health.attempts} "
+              f"overhead={(t_guard - t_plain) / 1e3:+.1f}ms")
+    return rows
+
+
 def bench_lowrank(problems, *, rank: int, seed: int) -> List[Dict]:
     """Sketched low-rank SVD vs. numpy's truncated SVD (quality + time)."""
     rows = []
@@ -202,6 +239,8 @@ def main(argv=None) -> None:
     rows = bench_lstsq(problems, cond=args.cond, seed=args.seed,
                        unprecond_cap=unprecond_cap, iters=args.iters)
     ms_rows = bench_multisketch(problems, cond=args.cond, seed=args.seed)
+    g_rows = bench_guarded(problems, cond=args.cond, seed=args.seed,
+                           iters=args.iters)
     lr_rows = bench_lowrank(problems, rank=16, seed=args.seed)
 
     fp32 = [r for r in rows if r["dtype"] == "float32"]
@@ -224,8 +263,11 @@ def main(argv=None) -> None:
         },
         "rows": rows,
         "multisketch": ms_rows,
+        "guarded": g_rows,
         "lowrank": lr_rows,
     }
+    from repro.health import report as health_report
+    payload["meta"]["health_counters"] = health_report.counters()
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"\nwrote {args.out}: {len(rows)} lstsq rows, "

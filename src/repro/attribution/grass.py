@@ -21,6 +21,7 @@ import numpy as np
 from repro.attribution import mlp as mlp_lib
 from repro.core import hashing
 from repro.core.variants import SketchBase, make_sketch
+from repro.health import report as health_report
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +78,15 @@ class GrassPipeline:
     feature cache builds P× wider per step.  Features are identical to the
     single-device run (chunks are computed by the same per-chunk launch
     either way).
+
+    Health: a per-example gradient with any non-finite entry (a NaN-poisoned
+    batch element, an overflowed activation) is QUARANTINED in-kernel —
+    zeroed before the sketch, so one bad example contributes nothing instead
+    of poisoning its whole chunk's feature block — and counted
+    (``.quarantined``, plus the process-wide ``grass.quarantined`` health
+    counter).  The mask is computed inside the jitted scan (a ``jnp.where``
+    per chunk), so the guarded path costs one finiteness reduction per
+    gradient row.
     """
 
     def __init__(self, cfg: GrassPipelineConfig, params, mesh=None,
@@ -85,6 +95,7 @@ class GrassPipeline:
         self.params = params
         self.mesh = mesh
         self.shard_axis = shard_axis
+        self.quarantined = 0           # rows zeroed across all featurize calls
         d_total = sum(p.size for p in jax.tree.leaves(params))
         self.d_total = d_total
         d_keep = min(cfg.sparse_dim, d_total)
@@ -119,34 +130,74 @@ class GrassPipeline:
             yc = ys.reshape((n_chunks, c) + ys.shape[1:])
 
             def chunk_feats(p_, xy):
-                """One chunk: vmapped per-example grads -> fused sketch.
-                The SAME body drives both branches, so sharded features
-                cannot drift from single-device ones."""
+                """One chunk: vmapped per-example grads -> quarantine ->
+                fused sketch.  The SAME body drives both branches, so
+                sharded features cannot drift from single-device ones.
+                Non-finite gradient rows are zeroed (quarantined) before
+                the sketch and flagged — jit-compatible (a where, not a
+                branch)."""
                 xb, yb = xy
                 grads = jax.vmap(lambda x, y: self._gfn(p_, x, y))(xb, yb)
-                return sketch_chunk(grads)          # (c, k) per chunk
+                ok = jnp.all(jnp.isfinite(grads), axis=1)
+                grads = jnp.where(ok[:, None], grads, 0.0)
+                return sketch_chunk(grads), ~ok     # (c, k), (c,) per chunk
 
             if mesh is None:
-                _, feats = jax.lax.scan(
+                _, (feats, bad) = jax.lax.scan(
                     lambda car, xy: (car, chunk_feats(p, xy)), 0, (xc, yc))
             else:
                 from jax.experimental.shard_map import shard_map
                 from jax.sharding import PartitionSpec as P
 
                 def scan_local(p_, xcl, ycl):
-                    _, f = jax.lax.scan(
+                    _, fb = jax.lax.scan(
                         lambda car, xy: (car, chunk_feats(p_, xy)),
                         0, (xcl, ycl))
-                    return f
+                    return fb
 
-                feats = shard_map(
+                feats, bad = shard_map(
                     scan_local, mesh=mesh,
                     in_specs=(P(), P(shard_axis), P(shard_axis)),
-                    out_specs=P(shard_axis), check_rep=False,
+                    out_specs=(P(shard_axis), P(shard_axis)),
+                    check_rep=False,
                 )(p, xc, yc)
-            return feats.reshape(n_chunks * c, -1)[:b]
+            # padded tail rows are sliced off BEFORE the bad-row count, so
+            # a quarantined example is never double-counted via its padding
+            # copies
+            return (feats.reshape(n_chunks * c, -1)[:b],
+                    bad.reshape(n_chunks * c)[:b])
 
         self._featurize = jax.jit(featurize)
+
+    def featurize(self, xs, ys) -> jnp.ndarray:
+        """Sketched features for a batch; quarantines non-finite rows.
+
+        Returns the ``(b, k)`` feature block.  Rows whose per-example
+        gradient contained any non-finite entry come back as zeros and are
+        added to ``.quarantined`` / the ``grass.quarantined`` counter.
+        """
+        feats, bad = self._featurize(self.params, xs, ys)
+        self._note_quarantine(bad)
+        return feats
+
+    def _note_quarantine(self, bad) -> None:
+        nbad = int(np.asarray(bad).sum())
+        if nbad:
+            self.quarantined += nbad
+            health_report.record("grass.quarantined", n=nbad,
+                                 detail=f"{nbad} non-finite gradient rows "
+                                        f"zeroed before sketch")
+
+    def health(self) -> health_report.HealthReport:
+        """A ``HealthReport`` summarizing this pipeline's quarantine state."""
+        rpt = health_report.HealthReport(op="featurize",
+                                         quarantined=self.quarantined)
+        if self.quarantined:
+            rpt.add(health_report.GuardFinding(
+                "finite", "grads", health_report.DEGRADED,
+                value=float(self.quarantined),
+                detail=f"{self.quarantined} gradient rows quarantined"))
+        return rpt
 
     def sketch_lowering(self):
         """The ``kernels.lowering.Lowering`` record of one featurize-chunk
@@ -171,9 +222,10 @@ class GrassPipeline:
             xb = x_train[i:i + batch]
             yb = y_train[i:i + batch]
             t0 = time.perf_counter()
-            f = self._featurize(self.params, xb, yb)
+            f, bad = self._featurize(self.params, xb, yb)
             f.block_until_ready()
             t += time.perf_counter() - t0
+            self._note_quarantine(bad)
             feats.append(f)
         return jnp.concatenate(feats, axis=0), t
 
@@ -185,7 +237,7 @@ class GrassPipeline:
         "kernel": τ = φ_zᵀ (ΦᵀΦ + λI)⁻¹ φ_i  (TRAK preconditioning; λ set
                   relative to the mean kernel eigenvalue).
         """
-        phi_z = self._featurize(self.params, x_test, y_test)     # (nt, k)
+        phi_z = self.featurize(x_test, y_test)                   # (nt, k)
         if self.cfg.attribution == "dot":
             tau = phi_z @ cache.T                                # (nt, n_train)
             return np.asarray(tau)

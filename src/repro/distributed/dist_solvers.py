@@ -95,6 +95,8 @@ def dist_sketch_precondition_lstsq(
     tol: float = 1e-6,
     max_iters: int = 100,
     impl: str = "auto",
+    guard: bool = False,
+    policy: Optional[object] = None,
 ) -> SolveResult:
     """Solve ``min_x ||A x - b||`` by DISTRIBUTED sketch-and-precondition.
 
@@ -108,6 +110,15 @@ def dist_sketch_precondition_lstsq(
       plan: optional pre-built sketch plan (wins over k/kappa/s/seed/dtype).
       k, kappa, s, seed, dtype, sampling_factor, factorization, tol,
         max_iters, impl: as in ``solvers.sketch_precondition_lstsq``.
+      guard: run the distributed health guards before iterating — the
+        psum'd ``SA`` must be BIT-IDENTICAL on every device (any replica
+        deviation means a corrupted collective contribution: zeroed or
+        permuted partial, dropped participant), plus the finite and
+        triangular-condition guards on ``R``.  A ``failed`` verdict
+        re-draws the sketch once (``RedrawPolicy``-derived seed) before
+        giving up; the ``HealthReport`` lands on ``.health``.
+      policy: optional ``repro.health.policy.RedrawPolicy`` (guard path
+        only) controlling the re-draw budget.
 
     Returns:
       ``SolveResult``; the solution matches the single-device solver to
@@ -119,14 +130,65 @@ def dist_sketch_precondition_lstsq(
         plan = plan_for_mesh(
             d, k or default_sketch_rows(n, sampling_factor),
             shard_count(mesh, axis), kappa=kappa, s=s, seed=seed, dtype=dtype)
-    # 1. sketch (psum'd partials -> replicated SA, bit-exact)
-    SA = sketch_apply_sharded(plan, A.astype(jnp.float32), mesh, axis, impl)
-    # 2. factor (tiny n×n problem, replicated)
-    R = ops.triangular_factor(SA.astype(jnp.float32), factorization)
+    num = shard_count(mesh, axis)
+
+    def sketch_and_factor(p):
+        # 1. sketch (psum'd partials -> replicated SA, bit-exact)
+        SA = sketch_apply_sharded(p, A.astype(jnp.float32), mesh, axis, impl)
+        # 2. factor (tiny n×n problem, replicated)
+        return SA, ops.triangular_factor(SA.astype(jnp.float32),
+                                         factorization)
+
+    rpt = None
+    if not guard:
+        _, R = sketch_and_factor(plan)
+    else:
+        from repro.health import guards
+        from repro.health import report as health_report
+        from repro.health.policy import RedrawPolicy
+
+        pol = policy if policy is not None else RedrawPolicy()
+        rpt = health_report.HealthReport(op="dist_sketch_precondition_lstsq")
+
+        def check(p, SA, R):
+            findings = [
+                guards.replica_consistency_guard(guards.replica_arrays(SA),
+                                                 "SA"),
+                guards.finite_guard(SA, "SA"),
+                guards.finite_guard(R, "R"),
+                guards.r_condition_guard(R, "R"),
+            ]
+            findings = [f for f in findings if f is not None]
+            for f in findings:
+                rpt.add(f)
+            return health_report.worst_status(
+                *[f.status for f in findings]) if findings else \
+                health_report.HEALTHY
+
+        R = None
+        for attempt in pol.attempts(seed=plan.seed, kappa=plan.kappa,
+                                    sampling_factor=sampling_factor):
+            p = plan if attempt.index == 0 else plan_for_mesh(
+                d, plan.k_req, num, kappa=plan.kappa, s=plan.s,
+                seed=attempt.seed, dtype=dtype)
+            pol.record(attempt)
+            if attempt.index > 0:
+                rpt.act(attempt.describe())
+            rpt.attempts += 1
+            SA, R = sketch_and_factor(p)
+            if pol.accepts(check(p, SA, R)):
+                break
+            # structural bumps don't help a corrupted collective; the
+            # ladder here is redraw-only — stop once redraws are spent
+            if attempt.index >= pol.max_redraws:
+                rpt.act("escalation_budget_exhausted")
+                health_report.record("policy.budget_exhausted")
+                break
     R = R.astype(b.dtype)
     # 3. iterate with sharded products
-    num = shard_count(mesh, axis)
     Ap, bp = _pad_rows_to(A, b, num)
     matvec, rmatvec = sharded_matvec_ops(Ap, mesh, axis)
-    return lsqr_operator(matvec, rmatvec, bp, nvars=n, R=R,
-                         tol=tol, max_iters=max_iters)
+    res = lsqr_operator(matvec, rmatvec, bp, nvars=n, R=R,
+                        tol=tol, max_iters=max_iters)
+    res.health = rpt
+    return res

@@ -1,0 +1,38 @@
+"""Guarded sketch execution: detection, re-draw escalation, fault injection.
+
+BlockPerm-SJLT is an oblivious subspace embedding *with failure
+probability δ*; this package is the production response to that tail —
+detect (``guards``), discard and re-draw (``policy``), and prove the
+whole loop works by injecting every failure class on purpose
+(``inject``).  See ``docs/robustness.md``.
+
+Only :mod:`repro.health.report` is imported eagerly: it is
+dependency-free, so low layers (``kernels.lowering``, ``kernels.ops``,
+``kernels.tune``) can record events through this package without import
+cycles.  ``guards`` / ``policy`` / ``inject`` load lazily on first
+attribute access.
+"""
+from __future__ import annotations
+
+from repro.health import report
+from repro.health.report import (DEGRADED, FAILED, HEALTHY, GuardFinding,
+                                 HealthReport, worst_status)
+
+_LAZY = ("guards", "policy", "inject")
+
+__all__ = ["report", "guards", "policy", "inject",
+           "GuardFinding", "HealthReport", "RedrawPolicy",
+           "HEALTHY", "DEGRADED", "FAILED", "worst_status"]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f"repro.health.{name}")
+        globals()[name] = mod
+        return mod
+    if name == "RedrawPolicy":
+        from repro.health.policy import RedrawPolicy
+        globals()["RedrawPolicy"] = RedrawPolicy
+        return RedrawPolicy
+    raise AttributeError(f"module 'repro.health' has no attribute {name!r}")

@@ -1,0 +1,240 @@
+"""Cheap post-launch validators for sketches, factors and replicas.
+
+Each guard inspects a CONCRETE artifact (a materialized sketch ``SA``, a
+triangular factor ``R``, per-device replicas of a psum result), classifies
+it ``healthy`` / ``degraded`` / ``failed`` and records the verdict both on
+the returned :class:`~repro.health.report.GuardFinding` and in the global
+counter registry.  Guards are O(artifact) or cheaper — they never touch
+the big operand ``A`` beyond one Frobenius norm — with one deliberate
+exception (``ose_probe``, the O(d·n²) ground-truth probe used by tests
+and the escalation-ladder acceptance check).
+
+Under a jax tracer the guards cannot read values; every guard then
+returns ``None`` (check skipped) instead of a finding, so guarded entry
+points stay safe to call from jitted code — they simply lose coverage
+there.  The solver/distributed integrations run eagerly, where the guards
+are always live.
+
+Threshold rationale (the δ/ε vocabulary of the paper's Thm 6.2):
+
+  * ``isometry_guard`` — ``E‖SA‖_F² = ‖A‖_F²`` holds for ANY sketch with
+    unit-variance columns, so the Frobenius ratio is an expectation-exact
+    probe: a ratio outside ``1 ± tol`` (default tol=0.5, the ε of the
+    γ≈4 sampling rule) means the draw's distortion is far beyond what the
+    sampling factor was sized for.
+  * ``r_condition_guard`` — ``R`` inherits cond(A), so a large condition
+    estimate alone is only ``degraded``; ``failed`` is reserved for what
+    no legitimate input produces: non-finite entries or a diagonal ratio
+    at the rank-deficiency floor.
+  * ``ose_probe`` — σ_min(S·U) for an orthonormal basis U of range(A) is
+    the quantity the OSE guarantee bounds below by 1−ε; a bad draw that
+    annihilates a direction of range(A) sends it to ~0.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.health import report as _report
+from repro.health.report import DEGRADED, FAILED, HEALTHY, GuardFinding
+
+# Default thresholds (module-level so tests and docs reference one source).
+ISOMETRY_TOL = 0.5          # healthy band: ratio within 1 ± tol
+ISOMETRY_FAIL = 0.9         # failed band: ratio outside 1 ± fail
+RCOND_DEGRADED = 1.0e6      # diag-ratio estimate above this: degraded
+RCOND_FAILED = 1.0e12       # … above this (or 0/non-finite diag): failed
+OSE_MIN_HEALTHY = 0.5       # σ_min(SU) ≥ 1 − ε with the default ε = 1/2
+OSE_MIN_FAILED = 0.1        # a direction of range(A) essentially annihilated
+
+
+def concrete_or_none(x) -> Optional[np.ndarray]:
+    """``np.asarray(x)`` when x holds real values, ``None`` under a tracer."""
+    if isinstance(x, jax.core.Tracer):
+        return None
+    return np.asarray(x)
+
+
+def _emit(finding: GuardFinding) -> GuardFinding:
+    _report.record(f"guard.{finding.guard}.{finding.status}",
+                   detail=finding.detail or None)
+    return finding
+
+
+def finite_guard(x, target: str = "operand") -> Optional[GuardFinding]:
+    """Non-finite sentinel: ``failed`` iff any entry is NaN/Inf.
+
+    The cheapest guard and the one that catches NaN-poisoned gradient
+    chunks, overflowed accumulations and corrupted buffers outright.
+    """
+    arr = concrete_or_none(x)
+    if arr is None:
+        return None
+    bad = int(np.size(arr) - np.count_nonzero(np.isfinite(arr)))
+    if bad == 0:
+        return _emit(GuardFinding("finite", target, HEALTHY, value=0.0))
+    return _emit(GuardFinding(
+        "finite", target, FAILED, value=float(bad),
+        detail=f"{bad}/{np.size(arr)} non-finite entries"))
+
+
+def isometry_guard(A, SA, target: str = "SA", *,
+                   tol: float = ISOMETRY_TOL,
+                   fail: float = ISOMETRY_FAIL) -> Optional[GuardFinding]:
+    """Isometry-in-expectation probe: ``‖SA‖_F / ‖A‖_F`` vs ``1 ± tol``.
+
+    ``healthy`` within ``1 ± tol``, ``degraded`` within ``1 ± fail``,
+    ``failed`` outside (or non-finite / identically zero — a sketch that
+    annihilated its input).  One reduction over each array; no extra
+    sketch application.
+    """
+    a = concrete_or_none(A)
+    sa = concrete_or_none(SA)
+    if a is None or sa is None:
+        return None
+    na = float(np.linalg.norm(a))
+    nsa = float(np.linalg.norm(sa))
+    if not (np.isfinite(na) and np.isfinite(nsa)):
+        return _emit(GuardFinding(
+            "isometry", target, FAILED, value=float("nan"),
+            detail="non-finite Frobenius norm"))
+    ratio = nsa / na if na > 0 else (1.0 if nsa == 0 else float("inf"))
+    dev = abs(ratio - 1.0)
+    if dev <= tol:
+        status = HEALTHY
+    elif dev <= fail:
+        status = DEGRADED
+    else:
+        status = FAILED
+    return _emit(GuardFinding(
+        "isometry", target, status, value=ratio, threshold=tol,
+        detail=f"‖SA‖_F/‖A‖_F deviation {dev:.3g}"))
+
+
+def r_condition_guard(R, target: str = "R", *,
+                      degraded: float = RCOND_DEGRADED,
+                      failed: float = RCOND_FAILED) -> Optional[GuardFinding]:
+    """Triangular condition estimate on a preconditioner factor ``R``.
+
+    Uses the diagonal ratio ``max|r_ii| / min|r_ii|`` — for a triangular
+    matrix a free lower bound on cond(R).  ``failed`` only on what no
+    legitimate (even ill-conditioned) input produces: non-finite entries,
+    a zero diagonal, or a ratio at the rank-deficiency floor.  A merely
+    large estimate is ``degraded`` (R inherits cond(A); the solver pays
+    iterations, not correctness).
+    """
+    r = concrete_or_none(R)
+    if r is None:
+        return None
+    if np.size(r) - np.count_nonzero(np.isfinite(r)):
+        return _emit(GuardFinding(
+            "r_condition", target, FAILED, value=float("nan"),
+            detail="non-finite entries in triangular factor"))
+    diag = np.abs(np.diagonal(r))
+    dmin = float(diag.min()) if diag.size else 0.0
+    dmax = float(diag.max()) if diag.size else 0.0
+    est = float("inf") if dmin == 0.0 else dmax / dmin
+    if est > failed:
+        status = FAILED
+    elif est > degraded:
+        status = DEGRADED
+    else:
+        status = HEALTHY
+    return _emit(GuardFinding(
+        "r_condition", target, status, value=est, threshold=failed,
+        detail=f"diag ratio estimate (lower bound on cond R)"))
+
+
+def ose_probe(plan, A, target: str = "sketch", *, impl: str = "auto",
+              min_healthy: float = OSE_MIN_HEALTHY,
+              min_failed: float = OSE_MIN_FAILED) -> Optional[GuardFinding]:
+    """Ground-truth OSE check: σ_min of ``S·U`` for U = orth(range(A)).
+
+    The quantity Thm 6.2 bounds: an ε-subspace-embedding keeps every
+    singular value of ``SU`` in ``[1−ε, 1+ε]``.  ``failed`` when a
+    direction of range(A) is essentially annihilated (σ_min below
+    ``min_failed``); ``degraded`` between the bands.  Costs an O(d·n²)
+    orthogonalization plus one extra sketch application — this is the
+    escalation-ladder acceptance check and the fault-injection test
+    oracle, NOT a hot-path guard.
+
+    The spectral error ``‖UᵀSᵀSU − I‖₂`` (``coherence.ose_spectral_error``)
+    is reported in the detail string; σ_min is the classified value
+    because the upper edge ``(1+ε)² − 1`` legitimately exceeds 1 at the
+    default ε = 1/2.
+    """
+    a = concrete_or_none(A)
+    if a is None:
+        return None
+    from repro.core import coherence            # lazy: keeps import DAG flat
+    from repro.kernels import ops
+    U = np.linalg.qr(np.asarray(a, np.float64))[0].astype(np.float32)
+    SU = np.asarray(ops.sketch_apply(plan, U, impl))
+    if not np.all(np.isfinite(SU)):
+        return _emit(GuardFinding(
+            "ose_probe", target, FAILED, value=float("nan"),
+            detail="non-finite sketch of the probe basis"))
+    smin = float(np.linalg.svd(SU, compute_uv=False).min())
+    err = coherence.ose_spectral_error(U, SU)
+    if smin < min_failed:
+        status = FAILED
+    elif smin < min_healthy:
+        status = DEGRADED
+    else:
+        status = HEALTHY
+    return _emit(GuardFinding(
+        "ose_probe", target, status, value=smin, threshold=min_healthy,
+        detail=f"σ_min(SU); spectral error {err:.3g}"))
+
+
+def replica_arrays(x) -> List[np.ndarray]:
+    """Per-device copies of a (supposedly) replicated jax.Array.
+
+    One entry per addressable device.  A single-device array yields one
+    copy (trivially consistent).
+    """
+    shards = getattr(x, "addressable_shards", None)
+    if not shards:
+        return [np.asarray(x)]
+    return [np.asarray(s.data) for s in shards]
+
+
+def replica_consistency_guard(
+        replicas: Sequence[np.ndarray], target: str = "R", *,
+        atol: float = 0.0) -> Optional[GuardFinding]:
+    """Cross-replica agreement check on a replicated collective result.
+
+    After a psum, every device must hold the IDENTICAL array (the sharded
+    sketch is bit-exact by construction — see ``distributed.sharded_apply``)
+    — so any deviation beyond ``atol`` (default: bitwise) means a corrupted
+    collective contribution: a zeroed or permuted partial, a dropped
+    participant, flipped bits on the interconnect.  Catches the class of
+    fault that otherwise produces a silently wrong — not crashed — answer.
+    """
+    arrs = [concrete_or_none(r) for r in replicas]
+    if any(a is None for a in arrs):
+        return None
+    if len(arrs) <= 1:
+        return _emit(GuardFinding(
+            "replica_consistency", target, HEALTHY, value=0.0,
+            detail="single replica"))
+    ref = arrs[0]
+    worst = 0.0
+    bad = 0
+    for a in arrs[1:]:
+        if a.shape != ref.shape:
+            return _emit(GuardFinding(
+                "replica_consistency", target, FAILED,
+                detail=f"replica shape mismatch {a.shape} vs {ref.shape}"))
+        dev = float(np.max(np.abs(a - ref))) if ref.size else 0.0
+        if not np.isfinite(dev) or dev > atol:
+            bad += 1
+            worst = max(worst, dev if np.isfinite(dev) else float("inf"))
+    if bad == 0:
+        return _emit(GuardFinding(
+            "replica_consistency", target, HEALTHY, value=0.0,
+            threshold=atol, detail=f"{len(arrs)} replicas bit-consistent"))
+    return _emit(GuardFinding(
+        "replica_consistency", target, FAILED, value=worst, threshold=atol,
+        detail=f"{bad}/{len(arrs) - 1} replicas deviate from replica 0"))

@@ -1,0 +1,355 @@
+"""Deterministic fault injectors: make every guard fire ON PURPOSE.
+
+A detection layer that is only ever exercised by accident is untested by
+definition.  This module manufactures each failure class the guards exist
+for, deterministically (seeded, no wall-clock, no platform randomness),
+so the test suite and the ``fault-injection`` CI job can prove that every
+detection path and every recovery rung actually runs:
+
+  * ``inject_nan``             — NaN/Inf poisoning of an operand or output
+                                 (→ ``guards.finite_guard``).
+  * ``adversarial_input``      — a seeded input whose range contains a
+                                 direction the CURRENT plan's draw
+                                 annihilates exactly (a real bad-embedding
+                                 event, not noise) — defeats draw #1, is
+                                 fixed by a re-draw or a κ bump
+                                 (→ ``guards.ose_probe`` + ``RedrawPolicy``).
+  * ``corrupt_cache_file``     — truncated / garbage / malformed-row tuner
+                                 cache JSON (→ hardened ``tune.load_cache``).
+  * ``corrupt_replica``        — a zeroed / permuted / scaled per-device
+                                 copy of a psum result, the silent-collective
+                                 -corruption class
+                                 (→ ``guards.replica_consistency_guard``).
+  * ``vmem_overflow_request``  — a (plan, spec) whose working set cannot
+                                 fit VMEM, forcing the lowering downgrade
+                                 ladder (→ ``Lowering.downgrade`` +
+                                 ``lowering.downgrade`` counter).
+
+``python -m repro.health.inject --out HEALTH_counters.json`` runs the
+whole catalogue through its guards (the CI ``fault-injection`` job) and
+exits non-zero if any injected fault goes undetected or unrecovered.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.blockperm import BlockPermPlan, block_rows_signs, make_plan
+from repro.health import guards, report
+from repro.health.policy import RedrawPolicy
+
+
+# ---------------------------------------------------------------------------
+# NaN / Inf poisoning
+# ---------------------------------------------------------------------------
+
+def inject_nan(x, *, count: int = 4, seed: int = 0,
+               value: float = float("nan")) -> np.ndarray:
+    """Poison ``count`` deterministic positions of ``x`` with ``value``.
+
+    Positions are drawn from a seeded generator, so the same (shape,
+    seed) always corrupts the same entries — tests can pin them.
+    """
+    arr = np.array(x, dtype=np.float32, copy=True)
+    if arr.size == 0:
+        return arr
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(arr.size, size=min(count, arr.size), replace=False)
+    arr.reshape(-1)[idx] = value
+    return arr
+
+
+# ---------------------------------------------------------------------------
+# Adversarially coherent input: defeat one specific draw, exactly.
+# ---------------------------------------------------------------------------
+
+def annihilated_direction(plan: BlockPermPlan) -> np.ndarray:
+    """A unit vector x with ``S x = 0`` EXACTLY for this plan's draw.
+
+    Construction (κ=1, s=1 plans): within one input block h, two columns
+    u₁ ≠ u₂ whose single nonzero hashes to the SAME destination row
+    collide; ``x = e_{u₁} − σ₁σ₂·e_{u₂}`` then cancels exactly in the
+    one output block h feeds.  Such a pair exists by pigeonhole whenever
+    ``B_c > B_r/s`` (more columns than destination rows), and the search
+    over the plan's own hash stream is deterministic.
+
+    This is the paper's δ-failure event made concrete: a direction of the
+    input space on which THIS draw is not an embedding at all.  A fresh
+    seed re-randomizes the hashes (the collision pattern moves), and a κ
+    bump requires the pair to collide at every level simultaneously — so
+    the escalation ladder repairs it by design.
+    """
+    if plan.kappa != 1 or plan.s != 1:
+        raise ValueError(
+            "annihilated_direction targets kappa=1, s=1 plans (higher κ·s "
+            "needs a simultaneous collision at every level — that tail is "
+            f"exactly what κ buys down); got kappa={plan.kappa}, s={plan.s}")
+    for g in range(plan.M):
+        h = plan.neighbors(g)[0]
+        u = np.arange(plan.Bc, dtype=np.int32)
+        rows, signs = block_rows_signs(plan, g, h, u, 0)
+        rows = np.asarray(rows)
+        signs = np.asarray(signs)
+        seen: Dict[int, int] = {}
+        for u2 in range(plan.Bc):
+            coord2 = h * plan.Bc + u2
+            if coord2 >= plan.d:          # padding region: not a real input
+                continue
+            r = int(rows[u2])
+            if r in seen:
+                u1 = seen[r]
+                x = np.zeros(plan.d, np.float32)
+                x[h * plan.Bc + u1] = 1.0
+                x[coord2] = -float(signs[u1]) * float(signs[u2])
+                return x / np.linalg.norm(x)
+            seen[r] = u2
+    raise ValueError(
+        f"no colliding column pair for {plan.describe()} — need "
+        f"B_c > B_r/s with real (non-padding) columns in some block")
+
+
+def adversarial_input(plan: BlockPermPlan, n: int, *, noise: float = 1e-3,
+                      seed: int = 0) -> np.ndarray:
+    """A (d, n) operand whose range defeats THIS plan's draw.
+
+    Column 0 is an exactly-annihilated unit direction (``S A e₀ = 0``);
+    the remaining columns are small seeded noise, so A is full rank and
+    the least-squares problem stays well-posed — only the SKETCH of it is
+    broken.  The OSE probe on draw #1 fails (σ_min(SU) ≈ 0), the isometry
+    and R-condition guards fail with it, and the redraw ladder recovers.
+    """
+    x = annihilated_direction(plan)
+    rng = np.random.default_rng(seed)
+    A = noise * rng.standard_normal((plan.d, n)).astype(np.float32)
+    A[:, 0] = x
+    return A
+
+
+# ---------------------------------------------------------------------------
+# Tuner-cache corruption
+# ---------------------------------------------------------------------------
+
+_CACHE_MODES = ("truncate", "garbage", "bad_entry")
+
+
+def corrupt_cache_file(path: str, mode: str = "truncate") -> str:
+    """Corrupt a tuner-cache JSON file in place; returns the path.
+
+    Modes: ``"truncate"`` (a half-written file — the crash-mid-write
+    case atomic persistence prevents), ``"garbage"`` (not JSON at all),
+    ``"bad_entry"`` (valid JSON, rows that do not parse as cache
+    entries).
+    """
+    if mode == "truncate":
+        with open(path, "rb") as f:
+            data = f.read()
+        with open(path, "wb") as f:
+            f.write(data[: max(1, len(data) // 2)])
+    elif mode == "garbage":
+        with open(path, "w") as f:
+            f.write("this is not JSON {{{")
+    elif mode == "bad_entry":
+        with open(path, "w") as f:
+            json.dump({"not a key tuple": {"no_tn_field": True},
+                       "[1, 2": {"tn": 64}}, f)
+    else:
+        raise ValueError(f"mode must be one of {_CACHE_MODES}, got {mode!r}")
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Corrupted collective contribution (replica divergence)
+# ---------------------------------------------------------------------------
+
+_REPLICA_MODES = ("zero", "permute", "scale")
+
+
+def corrupt_replica(replicas, slot: int = 1, mode: str = "zero",
+                    seed: int = 0):
+    """Corrupt replica ``slot`` of a replicated result, deterministically.
+
+    Models the silent-collective-corruption class: one participant's psum
+    contribution zeroed (``"zero"``), rows delivered out of order
+    (``"permute"``), or scaled (``"scale"`` — e.g. a double-counted
+    partial).  Returns a new list; the input arrays are not modified.
+    """
+    out = [np.array(r, copy=True) for r in replicas]
+    slot = slot % len(out)
+    bad = out[slot]
+    if mode == "zero":
+        bad[...] = 0.0
+    elif mode == "permute":
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(bad.shape[0])
+        out[slot] = np.ascontiguousarray(bad[perm])
+    elif mode == "scale":
+        bad *= 2.0
+    else:
+        raise ValueError(
+            f"mode must be one of {_REPLICA_MODES}, got {mode!r}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forced VMEM overflow (the lowering downgrade ladder)
+# ---------------------------------------------------------------------------
+
+def vmem_overflow_request(op: str = "fwd", *, gather: bool = False,
+                          shard: str = "none", devices: int = 1
+                          ) -> Tuple[BlockPermPlan, object]:
+    """A (plan, LaunchSpec) whose requested kernel CANNOT fit VMEM.
+
+    The pinned ``block_rows=256`` grid at d=65536 gives a stacked Φ
+    scratch over the budget at any tile width, so ``lower()`` must take a
+    downgrade rung (gather-materialize / v2→v1 / partial→oracle, per the
+    ladder in ``kernels/lowering.py``) and record it.
+    """
+    from repro.kernels import lowering
+    plan = make_plan(65_536, 1024, kappa=4, s=2, block_rows=256)
+    spec = lowering.LaunchSpec(op=op, n=64, impl="pallas", gather=gather,
+                               shard=shard, devices=devices)
+    return plan, spec
+
+
+# ---------------------------------------------------------------------------
+# The injector suite: every fault detected, every recovery taken.
+# ---------------------------------------------------------------------------
+
+def run_injector_suite(out: Optional[str] = None,
+                       verbose: bool = True) -> int:
+    """Run every injector through its guard; write the counters JSON.
+
+    Returns 0 iff every injected fault was detected AND the documented
+    recovery ran.  The counters JSON (``--out``) is written even on
+    failure — it is the debugging artifact for exactly the failing case.
+    """
+    import os
+    import tempfile
+    import warnings
+
+    from repro.kernels import lowering, tune
+    from repro.solvers import sketch_precondition as sp
+
+    report.reset_counters()
+    results: Dict[str, bool] = {}
+
+    def check(name: str, ok: bool, msg: str = "") -> None:
+        results[name] = bool(ok)
+        if verbose:
+            print(f"  [{'ok' if ok else 'FAIL'}] {name}" +
+                  (f" — {msg}" if msg else ""))
+
+    if verbose:
+        print("fault-injection suite (deterministic):")
+
+    # 1. NaN operand / output → finite sentinel.
+    clean = np.linspace(-1.0, 1.0, 64, dtype=np.float32).reshape(8, 8)
+    f = guards.finite_guard(inject_nan(clean, count=3, seed=7), "operand")
+    check("nan_operand_detected", f is not None and f.status == report.FAILED,
+          f.describe() if f else "guard skipped")
+    f = guards.finite_guard(inject_nan(clean, count=1, seed=9,
+                                       value=float("inf")), "output")
+    check("inf_output_detected", f is not None and f.status == report.FAILED)
+
+    # 2. Adversarially coherent input → bad draw detected, ladder recovers.
+    plan = make_plan(512, 64, kappa=1, s=1, seed=0)
+    A = adversarial_input(plan, 8, seed=0)
+    probe = guards.ose_probe(plan, A, impl="xla")
+    check("bad_draw_detected",
+          probe is not None and probe.status == report.FAILED,
+          probe.describe() if probe else "probe skipped")
+    b = (A @ np.ones(A.shape[1], np.float32)).astype(np.float32)
+    res = sp.sketch_precondition_lstsq(
+        A, b, k=plan.k_req, kappa=1, s=1, seed=0, impl="xla",
+        guard=True, policy=RedrawPolicy())
+    check("bad_draw_recovered",
+          res.health is not None and res.health.attempts > 1
+          and res.health.status != report.FAILED and res.converged,
+          f"attempts={res.health.attempts if res.health else '?'}, "
+          f"relres={res.relres:.2e}")
+
+    # 3. Corrupted tuner cache → warn + heuristic fallback, never a raise.
+    cache_ok = True
+    with tempfile.TemporaryDirectory() as td:
+        for mode in _CACHE_MODES:
+            path = os.path.join(td, f"cache_{mode}.json")
+            tune.clear_cache()
+            tune.autotune(make_plan(256, 64, kappa=2, s=2), 32,
+                          tns=(32,), warmup=0, iters=1)
+            tune.save_cache(path)
+            corrupt_cache_file(path, mode)
+            tune.clear_cache()
+            try:
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore")
+                    tune.load_cache(path)
+            except Exception as e:     # hardening promise: warn, never raise
+                cache_ok = False
+                if verbose:
+                    print(f"    load_cache({mode}) raised {e!r}")
+        tune.clear_cache()
+    snap = report.counters()
+    check("corrupt_cache_recovered",
+          cache_ok and snap.get("tune.cache_corrupt", 0) >= 1,
+          f"tune.cache_corrupt={snap.get('tune.cache_corrupt', 0)}")
+
+    # 4. Corrupted psum contribution → replica-consistency guard.
+    base = np.arange(24, dtype=np.float32).reshape(6, 4)
+    good = [base.copy() for _ in range(4)]
+    ok = guards.replica_consistency_guard(good, "R")
+    psum_ok = ok is not None and ok.status == report.HEALTHY
+    for mode in _REPLICA_MODES:
+        fnd = guards.replica_consistency_guard(
+            corrupt_replica(good, slot=2, mode=mode, seed=3), "R")
+        psum_ok = psum_ok and fnd is not None and fnd.status == report.FAILED
+    check("psum_corruption_detected", psum_ok)
+
+    # 5. Forced VMEM overflow → the lowering downgrade ladder fires.
+    vmem_ok = True
+    for op, gather, shard, dev in (("fwd", False, "none", 1),
+                                   ("fwd", True, "none", 1),
+                                   ("fwd", False, "row", 4)):
+        p, spec = vmem_overflow_request(op, gather=gather, shard=shard,
+                                        devices=dev)
+        lw = lowering.lower(p, spec)
+        vmem_ok = vmem_ok and bool(lw.downgrade)
+    snap = report.counters()
+    check("vmem_overflow_downgraded",
+          vmem_ok and snap.get("lowering.downgrade", 0) >= 1,
+          f"lowering.downgrade={snap.get('lowering.downgrade', 0)}")
+
+    payload = {
+        "suite": "repro.health.inject",
+        "injectors": {k: ("detected" if v else "MISSED")
+                      for k, v in results.items()},
+        "counters": report.counters(),
+        "ok": all(results.values()),
+    }
+    if out:
+        with open(out, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        if verbose:
+            print(f"wrote {out}")
+    if verbose:
+        print("counters: " + report.summarize_counters(max_items=100))
+    return 0 if all(results.values()) else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="FlashSketch fault-injection suite: prove every guard "
+                    "fires and every recovery rung runs")
+    ap.add_argument("--out", default=None,
+                    help="write the health-counters JSON here (the CI "
+                         "artifact)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    return run_injector_suite(out=args.out, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

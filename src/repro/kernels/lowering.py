@@ -48,6 +48,7 @@ import jax.numpy as jnp
 
 from repro.core.blockperm import (MIN_TILE_N, VMEM_BUDGET_BYTES,
                                   BlockPermPlan, fused_variant_bytes)
+from repro.health import report as health_report
 from repro.kernels import flashsketch as fsk
 from repro.kernels import ref as kref
 from repro.kernels import tune
@@ -453,6 +454,11 @@ def _lower(plan: BlockPermPlan, spec: LaunchSpec,
         tn, tn_source = None, "n/a"
         grid_cols = None
 
+    if downgrade:
+        # downgrades are health events: a request that could not run as
+        # asked.  The counter makes forced rungs visible process-wide
+        # (explain(), the fault-injection suite, long-running jobs).
+        health_report.record("lowering.downgrade", detail=downgrade)
     return Lowering(
         plan=eff, op=spec.op, impl=impl, impl_requested=impl_req,
         downgrade=downgrade, tn=tn, tn_source=tn_source, dtype=eff.dtype,
@@ -510,7 +516,9 @@ def explain(plan: BlockPermPlan, spec: Optional[LaunchSpec] = None,
 
     The trace lists the dtype/impl resolution, every rejected tile
     candidate (with its VMEM footprint), any downgrade and its reason, the
-    padding plan, and the final record.
+    padding plan, and the final record — plus the process-wide guard/health
+    counters (``repro.health.report``), so one explain shows both how the
+    launch resolves and what the guards have seen this process.
     """
     if spec is None:
         spec = LaunchSpec(**spec_kwargs)
@@ -522,6 +530,7 @@ def explain(plan: BlockPermPlan, spec: Optional[LaunchSpec] = None,
             f"tn={spec.tn}, dtype={spec.dtype!r}, gather={spec.gather}, "
             f"batch={spec.batch}, shard={spec.shard!r}x{spec.devices})")
     lines = [head] + ["  " + ln for ln in trace] + ["=> " + lw.describe()]
+    lines.append("health: " + health_report.summarize_counters())
     return "\n".join(lines)
 
 

@@ -49,12 +49,14 @@ jaxpr contains no ``pad`` of the operand's column axis).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.blockperm import BlockPermPlan
+from repro.health import report as health_report
 from repro.kernels import lowering
 
 Impl = Literal["auto", "pallas", "pallas_v1", "xla"]
@@ -440,11 +442,29 @@ def triangular_factor(SA: jnp.ndarray, factorization: str = "qr") -> jnp.ndarray
     Returns:
       R with a positive diagonal (fixes the QR/Cholesky sign ambiguity so
       the two factorizations agree and ``R⁻¹`` is well-defined).
+
+    The Cholesky path squares cond(SA); on a (near-)rank-deficient Gram it
+    silently returns NaN columns rather than raising.  On concrete (eager)
+    inputs a non-finite Cholesky factor is detected and automatically
+    downgraded to Householder QR, with the reason recorded in the health
+    registry (``factor.chol_downgrade``) and warned once per call — under
+    a jit tracer values are unreadable, so the jitted path keeps the
+    caller's choice (guarded entry points run this eagerly).
     """
     if factorization == "qr":
         R = jnp.linalg.qr(SA, mode="r")
     elif factorization == "chol":
         R = jnp.linalg.cholesky(SA.T @ SA).T  # upper-triangular
+        if not isinstance(R, jax.core.Tracer) and not bool(
+                jnp.all(jnp.isfinite(R))):
+            health_report.record(
+                "factor.chol_downgrade",
+                detail="non-finite Cholesky factor -> Householder QR")
+            warnings.warn(
+                "Cholesky of the sketch Gram returned non-finite entries "
+                "(near-rank-deficient SA); falling back to Householder QR",
+                RuntimeWarning, stacklevel=2)
+            R = jnp.linalg.qr(SA, mode="r")
     else:
         raise ValueError(
             f"factorization must be 'qr' or 'chol', got {factorization!r}")

@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+import os
 import time
 import warnings
 from typing import Dict, Iterable, Optional, Sequence, Tuple
@@ -375,6 +376,13 @@ def autotune_plan(
 # ---------------------------------------------------------------------------
 
 def save_cache(path: str) -> int:
+    """Persist the cache to ``path`` ATOMICALLY (tmp file + rename).
+
+    A crash mid-write must never leave a half-written JSON where the next
+    process expects a cache — ``os.replace`` makes the new file appear all
+    at once (same-filesystem rename is atomic on POSIX), so readers only
+    ever see the old complete file or the new complete file.
+    """
     def _row(v: TuneResult) -> Dict:
         d = dataclasses.asdict(v)
         # NaN is not valid JSON — untimed entries serialize time_us as null.
@@ -383,24 +391,66 @@ def save_cache(path: str) -> int:
         return d
 
     payload = {json.dumps(list(k)): _row(v) for k, v in _CACHE.items()}
-    with open(path, "w") as f:
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True, allow_nan=False)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
     return len(payload)
 
 
 def load_cache(path: str, *, merge: bool = True) -> int:
-    with open(path) as f:
-        payload = json.load(f)
+    """Load tuned winners from ``path``; returns the number of entries kept.
+
+    Hardened against corruption: a truncated / garbage / malformed cache
+    file warns and falls back to the heuristic (returns 0 or skips the bad
+    rows) instead of raising — a stale or damaged cache must never take
+    down a job whose correctness does not depend on it (the tile heuristic
+    is always available).  Every skipped file/row is counted under
+    ``tune.cache_corrupt`` in the health registry.
+    """
+    from repro.health import report as health_report
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        if not isinstance(payload, dict):
+            raise ValueError(f"expected a JSON object, got "
+                             f"{type(payload).__name__}")
+    except (json.JSONDecodeError, ValueError, OSError, UnicodeDecodeError) as e:
+        health_report.record("tune.cache_corrupt", detail=f"{path}: {e}")
+        warnings.warn(
+            f"tuner cache {path!r} is unreadable ({e}); ignoring it — tile "
+            f"selection falls back to the VMEM heuristic", RuntimeWarning,
+            stacklevel=2)
+        return 0
     if not merge:
         clear_cache()
+    kept = 0
+    bad = 0
     for ks, vd in payload.items():
-        key = tuple(json.loads(ks))
-        t = vd.get("time_us")
-        _CACHE[key] = TuneResult(
-            tn=int(vd["tn"]),
-            block_rows=vd.get("block_rows"),
-            time_us=float(t) if t is not None else float("nan"),
-            source="loaded",
-        )
-    _bump_generation()
-    return len(payload)
+        try:
+            key = tuple(json.loads(ks))
+            t = vd.get("time_us")
+            row = TuneResult(
+                tn=int(vd["tn"]),
+                block_rows=vd.get("block_rows"),
+                time_us=float(t) if t is not None else float("nan"),
+                source="loaded",
+            )
+        except (json.JSONDecodeError, ValueError, TypeError, KeyError,
+                AttributeError) as e:
+            bad += 1
+            health_report.record("tune.cache_corrupt",
+                                 detail=f"{path} entry {ks!r}: {e}")
+            continue
+        _CACHE[key] = row
+        kept += 1
+    if bad:
+        warnings.warn(
+            f"tuner cache {path!r}: skipped {bad} malformed entr"
+            f"{'y' if bad == 1 else 'ies'} (kept {kept})", RuntimeWarning,
+            stacklevel=2)
+    if kept:
+        _bump_generation()
+    return kept

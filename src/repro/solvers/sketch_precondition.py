@@ -55,6 +55,10 @@ class SolveResult:
                   launch that built the preconditioner (``None`` for
                   drivers that never sketched, e.g. plain ``lsqr``) — how
                   the sketch actually ran: impl, tile, dtype, downgrades.
+      health:     the ``repro.health.report.HealthReport`` of a guarded
+                  solve — every guard verdict on the sketch/factor plus
+                  the escalation-ladder actions taken (``None`` when the
+                  solve ran unguarded).
     """
 
     x: jnp.ndarray
@@ -62,6 +66,7 @@ class SolveResult:
     relres: float
     converged: bool
     lowering: Optional[object] = None
+    health: Optional[object] = None
 
 
 def _identity(v):
@@ -360,6 +365,23 @@ def default_sketch_rows(n: int, sampling_factor: float = 4.0) -> int:
     return flashsketch_paper.solver_sketch_rows(n, sampling_factor)
 
 
+def _run_iteration(A, b, R, method, tol, max_iters) -> SolveResult:
+    if method == "lsqr":
+        return lsqr(A, b, R=R, tol=tol, max_iters=max_iters)
+    if method == "cg":
+        return pcg_normal(A, b, R, tol=tol, max_iters=max_iters)
+    raise ValueError(f"method must be 'lsqr' or 'cg', got {method!r}")
+
+
+def _diverged(res: SolveResult) -> bool:
+    """Mid-solve divergence: the exact-residual chunk driver stopped
+    without convergence at a residual no better than x = 0 (or NaN) — the
+    preconditioner actively hurt, not merely underperformed."""
+    import math
+    return (not res.converged
+            and (not math.isfinite(res.relres) or res.relres >= 1.0))
+
+
 def sketch_precondition_lstsq(
     A: jnp.ndarray,
     b: jnp.ndarray,
@@ -376,6 +398,9 @@ def sketch_precondition_lstsq(
     tol: float = 1e-6,
     max_iters: int = 100,
     impl: str = "auto",
+    guard: bool = False,
+    policy: Optional[object] = None,
+    probe: bool = False,
 ) -> SolveResult:
     """Solve ``min_x ||A x - b||`` by sketch-and-precondition.
 
@@ -391,26 +416,115 @@ def sketch_precondition_lstsq(
       method: "lsqr" | "cg".
       tol / max_iters: iteration stopping rule.
       impl: kernel dispatch for the sketch ("auto"|"pallas"|"pallas_v1"|"xla").
+      guard: run the post-launch validators (``repro.health.guards``) on
+        every sketch/factor and climb the ``RedrawPolicy`` escalation
+        ladder on a ``failed`` verdict (re-draw seed → bump κ → bump the
+        sampling factor — the paper's δ/κ tradeoff run in reverse); a
+        diverging iteration additionally triggers a re-sketch restart.
+        The guarded path attaches a ``HealthReport`` to ``.health``.
+      policy: optional ``repro.health.policy.RedrawPolicy`` overriding the
+        default escalation budget (ignored unless ``guard=True``).
+      probe: with ``guard=True``, additionally run the O(d·n²) ground-truth
+        OSE probe (σ_min of S·orth(A)) per attempt — the strictest
+        acceptance check; off by default (the cheap guards catch the same
+        catastrophic draws at a fraction of the cost).
 
     Returns:
       ``SolveResult``; ``.iterations`` is the paper's quality-vs-speed knob
       made visible (κ=1 sketches are fastest but precondition worst).
     """
     d, n = A.shape
-    if plan is None:
-        plan = make_plan(d, k or default_sketch_rows(n, sampling_factor),
-                         kappa=kappa, s=s, seed=seed, dtype=dtype)
-    _, R = ops.sketch_qr(plan, A.astype(jnp.float32), impl,
-                         factorization=factorization)
-    R = R.astype(b.dtype)
-    if method == "lsqr":
-        res = lsqr(A, b, R=R, tol=tol, max_iters=max_iters)
-    elif method == "cg":
-        res = pcg_normal(A, b, R, tol=tol, max_iters=max_iters)
-    else:
-        raise ValueError(f"method must be 'lsqr' or 'cg', got {method!r}")
-    # attach the record of how the sketch actually launched (trace-time
-    # metadata only — the engine memoizes, so this re-lower is free)
+    if not guard:
+        if plan is None:
+            plan = make_plan(d, k or default_sketch_rows(n, sampling_factor),
+                             kappa=kappa, s=s, seed=seed, dtype=dtype)
+        _, R = ops.sketch_qr(plan, A.astype(jnp.float32), impl,
+                             factorization=factorization)
+        res = _run_iteration(A, b, R.astype(b.dtype), method, tol, max_iters)
+        # attach the record of how the sketch actually launched (trace-time
+        # metadata only — the engine memoizes, so this re-lower is free)
+        res.lowering = lowering.lower(
+            plan, lowering.LaunchSpec(op="fwd", n=n, impl=impl))
+        return res
+
+    # ---- guarded path (eager by construction: guards read values) -------
+    from repro.health import guards
+    from repro.health import report as health_report
+    from repro.health.policy import RedrawPolicy
+
+    pol = policy if policy is not None else RedrawPolicy()
+    rpt = health_report.HealthReport(op="sketch_precondition_lstsq")
+    A32 = A.astype(jnp.float32)
+    base_seed = plan.seed if plan is not None else seed
+    base_kappa = plan.kappa if plan is not None else kappa
+    base_s = plan.s if plan is not None else s
+    base_k = plan.k_req if plan is not None else k
+
+    def draw_and_check(p):
+        """Sketch + factor + guard verdict for one attempt's plan."""
+        SA, R = ops.sketch_qr(p, A32, impl, factorization=factorization)
+        findings = [guards.finite_guard(SA, "SA"),
+                    guards.isometry_guard(A32, SA, "SA"),
+                    guards.finite_guard(R, "R"),
+                    guards.r_condition_guard(R, "R")]
+        if probe:
+            findings.append(guards.ose_probe(p, A32, impl=impl))
+        findings = [f for f in findings if f is not None]
+        for f in findings:
+            rpt.add(f)
+        verdict = health_report.worst_status(
+            *[f.status for f in findings]) if findings else \
+            health_report.HEALTHY
+        return R, verdict
+
+    accepted = None          # (plan, R)
+    best = None              # least-bad fallback if the budget exhausts
+    best_rank = len(health_report.STATUS_ORDER)
+    for attempt in pol.attempts(seed=base_seed, kappa=base_kappa,
+                                sampling_factor=sampling_factor):
+        if attempt.index == 0 and plan is not None:
+            p = plan
+        else:
+            p = pol.plan_for(attempt, d, n, s=base_s, dtype=dtype, k=base_k)
+        pol.record(attempt)
+        if attempt.index > 0:
+            rpt.act(attempt.describe())
+        rpt.attempts += 1
+        R, verdict = draw_and_check(p)
+        rank = health_report.STATUS_ORDER.index(verdict)
+        if rank < best_rank:
+            best, best_rank = (p, R), rank
+        if pol.accepts(verdict):
+            accepted = (p, R)
+            break
+    if accepted is None:
+        # every rung failed: proceed with the least-bad draw rather than
+        # silently returning garbage or raising — the report says so.
+        accepted = best
+        rpt.act("escalation_budget_exhausted")
+        health_report.record("policy.budget_exhausted")
+    p, R = accepted
+    res = _run_iteration(A, b, R.astype(b.dtype), method, tol, max_iters)
+
+    # Mid-solve divergence → re-sketch restart (the multisketch restart
+    # rule applied to the guarded single-sketch solver): an accepted factor
+    # whose iteration still diverges means the draw was bad in a way the
+    # cheap guards missed; throw it away and re-draw from a disjoint seed
+    # stream.
+    from repro.solvers.multisketch import derive_seed   # lazy: no cycle
+    restarts = 0
+    while _diverged(res) and restarts < pol.max_resketch_restarts:
+        restarts += 1
+        new_seed = derive_seed(p.seed, pol.budget + restarts, 3)
+        p = make_plan(d, p.k_req, kappa=p.kappa, s=p.s, seed=new_seed,
+                      dtype=dtype)
+        rpt.act(f"resketch_restart(seed={new_seed})")
+        health_report.record("policy.resketch_restart")
+        R, verdict = draw_and_check(p)
+        rpt.attempts += 1
+        res = _run_iteration(A, b, R.astype(b.dtype), method, tol, max_iters)
+
+    res.health = rpt
     res.lowering = lowering.lower(
-        plan, lowering.LaunchSpec(op="fwd", n=n, impl=impl))
+        p, lowering.LaunchSpec(op="fwd", n=n, impl=impl))
     return res

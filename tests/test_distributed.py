@@ -243,11 +243,12 @@ _SCRIPT = textwrap.dedent("""
     xg, yg = mlp_lib.make_synthetic_mnist(32, 32, mcfg.n_classes, seed=0)
     params = mlp_lib.train_mlp(mcfg, xg, yg)
     gcfg = GrassPipelineConfig(sparse_dim=128, sketch_dim=32, chunk=4)
-    f_single = GrassPipeline(gcfg, params)._featurize(params, xg, yg)
+    f_single = GrassPipeline(gcfg, params).featurize(xg, yg)
     f_shard = GrassPipeline(gcfg, params, mesh=mesh, shard_axis="shard")
-    f_sharded = f_shard._featurize(params, xg, yg)
+    f_sharded = f_shard.featurize(xg, yg)
     out["exact"]["grass_featurize"] = bool(np.allclose(
         np.asarray(f_single), np.asarray(f_sharded), atol=1e-5))
+    out["exact"]["grass_no_quarantine"] = f_shard.quarantined == 0
 
     # distributed sketch-and-precondition: converges, matches single-device
     d, n = 4096, 24
@@ -261,6 +262,17 @@ _SCRIPT = textwrap.dedent("""
         "relres": float(res.relres),
         "x_err": float(np.max(np.abs(np.asarray(res.x) - x_np))),
     }
+
+    # guarded distributed solve: the replica-consistency guard must see the
+    # psum'd SA bit-identical on all 8 devices and accept draw #1
+    resg = dist_sketch_precondition_lstsq(Am, b, mesh, "shard", tol=1e-5,
+                                          guard=True)
+    out["solver"]["guarded_converged"] = bool(resg.converged)
+    out["solver"]["guarded_status"] = resg.health.status
+    out["solver"]["guarded_attempts"] = int(resg.health.attempts)
+    out["solver"]["guarded_replica_ok"] = any(
+        f.guard == "replica_consistency" and f.status == "healthy"
+        for f in resg.health.findings)
     print(json.dumps(out))
 """)
 
@@ -280,3 +292,7 @@ def test_sharded_apply_matches_single_device(tmp_path):
     assert res["solver"]["converged"], res["solver"]
     assert res["solver"]["iterations"] <= 40
     assert res["solver"]["x_err"] < 1e-3
+    assert res["solver"]["guarded_converged"], res["solver"]
+    assert res["solver"]["guarded_status"] in ("healthy", "degraded")
+    assert res["solver"]["guarded_attempts"] == 1, res["solver"]
+    assert res["solver"]["guarded_replica_ok"], res["solver"]

@@ -12,6 +12,12 @@ the resolved impl (with any downgrade and its reason), the tile width and
 where it came from, the VMEM footprint, the padding plan — plus the
 modeled TPU-v5e roofline of that same record (``engine.cost_of``).  CI
 runs this as a smoke step so the engine's public surface cannot rot.
+
+``--check-health`` additionally runs a tiny GUARDED solve on this shape
+(``sketch_precondition_lstsq(guard=True)``) and prints its HealthReport
+and the process-wide guard counters — exits non-zero if the guarded solve
+fails outright.  CI runs this too, so the guard layer's public surface is
+smoke-tested alongside the lowering trace.
 """
 from __future__ import annotations
 
@@ -51,6 +57,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tune-cache", default=None,
                     help="JSON tuner cache to load first (tuned winners "
                          "then show up as the resolved tile)")
+    ap.add_argument("--check-health", action="store_true",
+                    help="also run a tiny guarded solve on this shape and "
+                         "print its HealthReport + the guard counters "
+                         "(nonzero exit if the guarded solve fails)")
     args = ap.parse_args(argv)
 
     from repro import engine
@@ -82,6 +92,39 @@ def main(argv=None) -> int:
           f"hbm={1e6 * kc.memory_s:8.2f} us   "
           f"ici={1e6 * kc.ici_s:8.2f} us")
     print(f"  modeled {kc.modeled_us:.2f} us, bottleneck: {kc.bottleneck}")
+
+    if args.check_health:
+        return _check_health(args)
+    return 0
+
+
+def _check_health(args) -> int:
+    """Tiny guarded solve with this launch's κ/s/seed knobs; prints the
+    HealthReport and the process guard counters.  The problem shape is
+    capped (the point is exercising the guard surface, not the launch
+    size)."""
+    import numpy as np
+
+    from repro.health import report
+    from repro.solvers.sketch_precondition import sketch_precondition_lstsq
+
+    d = min(args.d, 8192)
+    n = min(args.n, 32)
+    rng = np.random.default_rng(args.seed)
+    A = rng.standard_normal((d, n)).astype(np.float32)
+    b = (A @ np.ones(n, np.float32)).astype(np.float32)
+    res = sketch_precondition_lstsq(
+        A, b, kappa=args.kappa, s=args.s, seed=args.seed,
+        impl="auto", guard=True, probe=True)
+    print(f"\nguarded solve on a capped ({d}, {n}) problem:")
+    print(res.health.describe())
+    print(f"converged={res.converged} relres={res.relres:.3g} "
+          f"iterations={res.iterations}")
+    print("guard counters: " + report.summarize_counters(max_items=100))
+    if res.health.status == "failed" or not res.converged:
+        print("health check FAILED", file=sys.stderr)
+        return 1
+    print("health check ok")
     return 0
 
 
