@@ -11,6 +11,18 @@ block are divided into s chunks of size B_r/s; nonzero i ∈ [s] of column u
 lands in chunk i at row  ``i·(B_r/s) + hash(seed,g,h,u,i) mod (B_r/s)`` with
 sign from an independent hash bit.  Exactly s nonzeros per column, one per
 chunk ⇒ exactly κs nonzeros per column of S, magnitude 1/√(κs).
+
+Competitor GLOBAL families (``plan.family``): CountSketch (Higgins & Boman,
+arXiv:2508.14209) and sparse-graph sketches (Hu et al., arXiv:2102.05758)
+place their s nonzeros per column anywhere in [k_pad] — no block-permutation
+structure.  They are realized on the SAME plan record by forcing κ = M (every
+input block may feed every output block; the wiring table is all-blocks) with
+a global row partition: nonzero i of global column u lands in global chunk i
+at row ``i·(k_pad/s) + hash(seed, TAG, u, i) mod (k_pad/s)``, magnitude 1/√s.
+CountSketch is the s = 1 case; the sparse-graph family is a column-degree-s
+bipartite expander (s = 4 default).  Because κ == M, every downstream
+consumer — kernels, VMEM ladders, tuner keys, the roofline — prices the
+all-blocks structure honestly with zero family-specific branches.
 """
 from __future__ import annotations
 
@@ -39,6 +51,27 @@ MIN_TILE_N = 8
 
 # The kernel variants (single source; tune/sketch_model/benchmarks reuse it).
 SKETCH_VARIANTS = ("fwd", "transpose", "blockrow")
+
+# Sketch families a plan can describe.  "blockperm" is the paper's
+# BLOCKPERM-SJLT; the GLOBAL families (CountSketch / sparse-graph) have no
+# block-permutation structure and are realized as κ == M plans (see module
+# docstring).  The blockrow op and the row-sharded partial are
+# blockperm-wiring-specific and reject global-family plans in lowering.
+GLOBAL_FAMILIES = ("countsketch", "graph")
+FAMILIES = ("blockperm",) + GLOBAL_FAMILIES
+
+# Canonical per-column nonzero count of each family (the construction the
+# name PROMISES: CountSketch is s=1 by definition, the sparse-graph sketch
+# is the s=4 expander).  Single source for the variants registry and the
+# family-parametric solver entry points — a caller asking for
+# family="countsketch" without pinning s must get THE CountSketch, not a
+# blockperm-default s riding a global plan.
+FAMILY_DEFAULT_S = {"blockperm": 2, "countsketch": 1, "graph": 4}
+
+# Hash tag separating the global-family row/sign stream from every other
+# stream in the repo (0xB10C blockrow wiring, 0x5EED blockrow rows,
+# 0x5117 unstructured SJLT, 0xFAD/0x5A3 SRHT).
+GLOBAL_FAMILY_TAG = 0x610B
 
 # Gather-fused variants: the input stays in HBM and masked rows are DMA'd
 # straight into a VMEM gather scratch (no A[mask] intermediate), so the
@@ -111,10 +144,20 @@ class BlockPermPlan:
     dtype: str = "float32"  # streaming dtype: "float32" or "bfloat16"
                             # (accumulation is always fp32; bf16 halves the
                             # HBM stream of A, justified by Jeendgar et al.)
+    family: str = "blockperm"  # "blockperm" | "countsketch" | "graph";
+                               # global families carry kappa == M (all-blocks
+                               # wiring) and a k_pad-wide row partition.
+
+    @property
+    def is_global(self) -> bool:
+        """Whether the plan is a global (non-block-permutation) family."""
+        return self.family in GLOBAL_FAMILIES
 
     @property
     def nnz_per_col(self) -> int:
-        return self.kappa * self.s
+        # global families: exactly s nonzeros per column of the FULL S
+        # (one per k_pad/s chunk); blockperm: κ·s (s per participating block).
+        return self.s if self.is_global else self.kappa * self.s
 
     @property
     def stream_dtype(self):
@@ -127,22 +170,27 @@ class BlockPermPlan:
 
     @property
     def scale(self) -> float:
-        return 1.0 / math.sqrt(self.kappa * self.s)
+        # 1/√(nnz per column): 1/√s for the global families, 1/√(κs) else.
+        return 1.0 / math.sqrt(self.nnz_per_col)
 
     @property
     def chunk(self) -> int:
-        """Row-partition chunk height B_r / s."""
-        return self.Br // self.s
+        """Row-partition chunk height: B_r/s per block for blockperm,
+        k_pad/s globally for the global families."""
+        return self.k_pad // self.s if self.is_global else self.Br // self.s
 
     def neighbors(self, g: int) -> Tuple[int, ...]:
+        if self.is_global:
+            return tuple(range(self.M))        # every input block feeds g
         return tuple(
             wiring.neighbor_fused(g, ell + 1, self.a, self.b, self.M)
             for ell in range(self.kappa)
         )
 
     def describe(self) -> str:
+        fam = "" if self.family == "blockperm" else f"family={self.family}, "
         return (
-            f"BlockPermPlan(d={self.d}->pad{self.d_pad}, k={self.k}->pad{self.k_pad}, "
+            f"BlockPermPlan({fam}d={self.d}->pad{self.d_pad}, k={self.k}->pad{self.k_pad}, "
             f"M={self.M}, Br={self.Br}, Bc={self.Bc}, kappa={self.kappa}, s={self.s}, "
             f"nnz/col={self.nnz_per_col}, dtype={self.dtype}, seed={self.seed})"
         )
@@ -171,6 +219,7 @@ def make_plan(
     block_rows: Optional[int] = None,
     max_block_rows: int = 256,
     dtype: str = "float32",
+    family: str = "blockperm",
 ) -> BlockPermPlan:
     """Choose a hardware-aligned block grid for (d, k) and freeze the plan.
 
@@ -205,6 +254,12 @@ def make_plan(
         and accumulation is always fp32, so bf16 halves the dominant
         memory term at a small rounding cost on A.  Anything else raises
         ``ValueError``.
+      family: ``"blockperm"`` (default), or a GLOBAL family —
+        ``"countsketch"`` / ``"graph"``.  Global families place their s
+        nonzeros per column anywhere in [k_pad] (no block structure), so
+        the plan is frozen with κ = M (all-blocks wiring; the ``kappa``
+        argument is ignored) and ``s`` must be a power of two so the
+        global row partition k_pad/s is exact.
 
     Returns:
       A frozen, hashable ``BlockPermPlan`` suitable as a static jit
@@ -216,6 +271,13 @@ def make_plan(
     if kappa < 1 or s < 1:
         raise ValueError("kappa and s must be >= 1")
     _check_dtype(dtype)
+    if family not in FAMILIES:
+        raise ValueError(f"family must be one of {FAMILIES}, got {family!r}")
+
+    if family in GLOBAL_FAMILIES:
+        return _make_global_plan(d, k, s=s, seed=seed, block_rows=block_rows,
+                                 max_block_rows=max_block_rows, dtype=dtype,
+                                 family=family)
 
     if block_rows is not None:
         # Honor the pin (rounded up to a power of two).  A pin that cannot
@@ -261,6 +323,52 @@ def make_plan(
     return BlockPermPlan(
         d=d, k=k_pad, k_req=k, d_pad=d_pad, k_pad=k_pad, M=M, Br=Br, Bc=Bc,
         kappa=kappa, s=s, seed=seed, a=a, b=b, dtype=dtype,
+    )
+
+
+def _make_global_plan(d: int, k: int, *, s: int, seed: int,
+                      block_rows: Optional[int], max_block_rows: int,
+                      dtype: str, family: str) -> BlockPermPlan:
+    """Grid selection for the GLOBAL families (CountSketch / sparse-graph).
+
+    Same hardware alignment as the blockperm path, but the frozen degree is
+    κ = M: the wiring is all-blocks (kernels use a tiled-arange table), so
+    the fused working set carries a full-width stacked Φ of (B_r, M·B_c) =
+    (B_r, d_pad).  The VMEM shrink loop still converges — halving B_r
+    doubles M and halves B_c, shrinking the Φ term — and the downstream
+    v2→v1 ladder covers plans it cannot save.  ``s`` must be a power of
+    two with ``s ≤ k_pad`` so the global row partition k_pad/s is exact
+    (``hash_mod``'s power-of-two mask path then applies everywhere).
+    """
+    if s & (s - 1):
+        raise ValueError(
+            f"family={family!r} requires s to be a power of two "
+            f"(the global row partition is k_pad/s), got s={s}")
+    if block_rows is not None:
+        Br = _next_pow2(block_rows)
+        M = _next_pow2(max(1, math.ceil(k / Br)))
+    else:
+        Br = min(_next_pow2(max(1, min(max_block_rows, k))), max_block_rows)
+        M = _next_pow2(max(1, math.ceil(k / Br)))
+    Bc = _aligned_bc(d, M)
+    if block_rows is None:
+        # κ = M tracks the split: the working set is evaluated at the
+        # CURRENT M each iteration (Φ = M·Br·Bc shrinks as Br halves).
+        while (fused_working_set_bytes(M, Br, Bc, tn=MIN_TILE_N)
+               > VMEM_BUDGET_BYTES and Br // 2 >= 1):
+            Br //= 2
+            M *= 2
+            Bc = _aligned_bc(d, M)
+    k_pad = M * Br
+    if s > k_pad:
+        raise ValueError(
+            f"family={family!r}: s={s} exceeds the padded sketch dim "
+            f"k_pad={k_pad} — the row partition needs s <= k_pad")
+    d_pad = M * Bc
+    a, b = wiring.derive_affine_params(seed, M)   # unused by the family,
+    return BlockPermPlan(                         # kept for record parity
+        d=d, k=k_pad, k_req=k, d_pad=d_pad, k_pad=k_pad, M=M, Br=Br, Bc=Bc,
+        kappa=M, s=s, seed=seed, a=a, b=b, dtype=dtype, family=family,
     )
 
 
@@ -324,14 +432,69 @@ def dense_block(plan: BlockPermPlan, g, h) -> jnp.ndarray:
     return phi
 
 
+def global_rows_signs(plan: BlockPermPlan, u, i):
+    """Destination GLOBAL row in [k_pad] and sign for nonzero i of global
+    column u — the CountSketch / sparse-graph construction.
+
+    Args:
+      plan: a GLOBAL-family plan (supplies seed and the global chunk
+        height k_pad/s).
+      u: GLOBAL column index in [d_pad].
+      i: nonzero index within the column, in [s] (selects the row chunk;
+        CountSketch is the s = 1 case).
+      Both may be arrays (broadcastable against each other).
+
+    Returns:
+      ``(rows, signs)``: int32 global rows in ``[0, k_pad)`` (nonzero i
+      lands in chunk i: ``rows // (k_pad/s) == i``) and float32 signs in
+      {±1}.  The jnp oracle, ``dense_global_block`` and the Pallas kernel
+      body all call THIS function — bit-identical streams by construction.
+    """
+    hsh = hashing.hash_words(
+        np.uint32(plan.seed),
+        np.uint32(GLOBAL_FAMILY_TAG),
+        jnp.asarray(u, jnp.uint32),
+        jnp.asarray(i, jnp.uint32),
+    )
+    chunk = plan.chunk                                   # k_pad // s
+    rows = jnp.asarray(i, jnp.int32) * chunk + hashing.hash_mod(hsh, chunk)
+    signs = hashing.hash_to_unit_sign(hsh)
+    return rows, signs
+
+
+def dense_global_block(plan: BlockPermPlan, g, h) -> jnp.ndarray:
+    """Block (g, h) of the GLOBAL family's S as a dense ``(Br, Bc)`` tile
+    (unscaled): the rows of S in ``[g·Br, (g+1)Br)`` restricted to columns
+    ``[h·Bc, (h+1)Bc)``.  Nonzeros whose global row lands outside block g
+    are masked out by the row comparison — the fused kernel sums these
+    tiles over all M values of h, recovering every nonzero exactly once.
+    """
+    u = h * plan.Bc + jnp.arange(plan.Bc, dtype=jnp.int32)   # global columns
+    i = jnp.arange(plan.s, dtype=jnp.int32)                  # (s,)
+    rows, signs = global_rows_signs(plan, u[None, :], i[:, None])  # (s, Bc)
+    local = rows - g * plan.Br
+    row_iota = jnp.arange(plan.Br, dtype=jnp.int32)          # (Br,)
+    onehot = (row_iota[None, :, None] == local[:, None, :]).astype(jnp.float32)
+    return jnp.sum(onehot * signs[:, None, :], axis=0)       # (Br, Bc)
+
+
 def materialize_sketch_matrix(plan: BlockPermPlan) -> jnp.ndarray:
     """Full S ∈ R^{k_pad × d_pad} as a DENSE fp32 array — tests and tiny
     benchmarks only (O(k_pad · d_pad) memory defeats the whole point of
-    the sketch at real sizes).  Includes the 1/√(κs) scale, so
-    ``S @ A_padded`` equals ``ops.sketch_apply(plan, A)`` up to fp32
-    rounding regardless of impl; the streaming ``dtype`` knob does not
-    apply here (dense math is fp32 throughout).
+    the sketch at real sizes).  Includes the 1/√(κs) scale (1/√s for the
+    global families), so ``S @ A_padded`` equals
+    ``ops.sketch_apply(plan, A)`` up to fp32 rounding regardless of impl;
+    the streaming ``dtype`` knob does not apply here (dense math is fp32
+    throughout).
     """
+    if plan.is_global:
+        u = jnp.arange(plan.d_pad, dtype=jnp.int32)
+        i = jnp.arange(plan.s, dtype=jnp.int32)
+        rows, signs = global_rows_signs(plan, u[None, :], i[:, None])
+        S = jnp.zeros((plan.k_pad, plan.d_pad), dtype=jnp.float32)
+        for ii in range(plan.s):
+            S = S.at[rows[ii], u].add(signs[ii])
+        return S * plan.scale
     pi = wiring.wiring_table(plan.seed, plan.M, plan.kappa)  # (κ, M)
     S = jnp.zeros((plan.k_pad, plan.d_pad), dtype=jnp.float32)
     for g in range(plan.M):

@@ -10,6 +10,11 @@ reproduced:
   5. BLOCKPERM-SJLT (ours)                   -> ``BlockPermSketch``
   6. Localized / block-diagonal SJLT (κ=1)   -> ``BlockPermSketch(kappa=1)``
   7. FLASHBLOCKROW (App. C)                  -> ``BlockRowSketch``
+  8. CountSketch (Higgins & Boman, fused)    -> ``CountSketch`` (a GLOBAL
+     family: 1 nonzero per column anywhere in [k], lowered through the
+     engine as a κ=M plan — same kernels, ladders, tuner, snapshot)
+  9. Sparse-graph sketch (Hu et al.)         -> ``GraphSketch`` (global,
+     s nonzeros per column = a column-degree-s bipartite expander)
 
 Each sketch exposes ``apply(A) -> (k, n)`` for ``A: (d, n)`` and reports its
 cost model (flops, bytes moved, whether it needs S materialized) so the
@@ -26,7 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing
-from repro.core.blockperm import BlockPermPlan, make_plan
+from repro.core.blockperm import (BlockPermPlan, FAMILY_DEFAULT_S,
+                                  make_plan)
 from repro.kernels import lowering as klowering
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -44,6 +50,11 @@ class CostModel:
 
 class SketchBase:
     name: str = "base"
+    # Distributional contract: E[SᵀS] = I over the seed draw.  Part of the
+    # registry-wide conformance battery (tests/test_variant_conformance.py);
+    # a family that deliberately trades unbiasedness away (blockrow's
+    # single-pass gather) declares it here instead of special-casing tests.
+    unbiased: bool = True
 
     def __init__(self, d: int, k: int, seed: int = 0):
         self.d = int(d)
@@ -204,7 +215,13 @@ class SRHTSketch(SketchBase):
         logd = max(1, int(math.log2(self.d_pad)))
         return CostModel(
             flops=2.0 * self.d_pad * logd * n,
-            hbm_bytes=4.0 * (self.d_pad * n * 2 + self.k * n),
+            # The butterfly is log₂(d) sequential passes, each reading and
+            # writing the full (d_pad, n) operand — exactly what ``fwht``
+            # above does, and why FHT-based sketches lose the memory race
+            # in practice despite the O(d log d) flop count.  (A fused
+            # multi-stage FHT could amortize a few passes, but not below
+            # the paper's measured gap.)
+            hbm_bytes=4.0 * (2.0 * self.d_pad * n * logd + self.k * n),
             materializes_S=False,
         )
 
@@ -315,10 +332,66 @@ class LocalizedSketch(BlockPermSketch):
         super().__init__(d, k, kappa=1, s=s, seed=seed, impl=impl)
 
 
+class CountSketch(BlockPermSketch):
+    """CountSketch (Higgins & Boman, arXiv:2508.14209) as a first-class
+    engine family.
+
+    One ±1 nonzero per column, hashed anywhere in ``[k]`` — realized as a
+    GLOBAL-family plan (``family="countsketch"``, κ=M: every input block
+    feeds every output block), so the fused Pallas kernels, VMEM downgrade
+    ladders, gather/batched paths, tuner, and golden snapshot all apply
+    with zero new kernel code.  The plan seed is drawn from the family's
+    disjoint ``multisketch.derive_seed`` stream, so mixing families under
+    one master seed never collides hash streams.
+    """
+
+    name = "countsketch"
+    default_s = FAMILY_DEFAULT_S["countsketch"]
+
+    def __init__(self, d, k, s: Optional[int] = None, seed: int = 0,
+                 impl: str = "auto", block_rows: Optional[int] = None,
+                 dtype: Optional[str] = None):
+        # core must not import solvers at module load (layering); the seed
+        # derivation is the one shared utility, pulled in lazily.
+        from repro.solvers.multisketch import derive_seed, family_stream
+        s = self.default_s if s is None else int(s)
+        plan = make_plan(
+            d, k, s=s,
+            seed=derive_seed(seed, 0, 0, stream=family_stream(self.name)),
+            block_rows=block_rows, dtype=dtype or "float32",
+            family=self.name)
+        super().__init__(d, k, seed=seed, impl=impl, plan=plan)
+
+    @property
+    def name_full(self) -> str:
+        p = self.plan
+        tag = f"{self.name}(s={p.s}"
+        if p.dtype != "float32":
+            tag += f",{p.dtype}"
+        return tag + ")"
+
+
+class GraphSketch(CountSketch):
+    """Sparse-graph sketch (Hu et al., arXiv:2102.05758): a column-degree-s
+    bipartite expander with ±1/√s entries — CountSketch's construction with
+    s independent per-chunk hashes per column, same global lowering."""
+
+    name = "graph"
+    default_s = FAMILY_DEFAULT_S["graph"]
+
+
 class BlockRowSketch(SketchBase):
-    """FLASHBLOCKROW (App. C): gather-only, reads A once, fragile."""
+    """FLASHBLOCKROW (App. C): gather-only, reads A once, fragile.
+
+    ``unbiased = False``: the iid block choices collide across the κ
+    revisits (identical Φ patterns add coherently — certain at M = 1,
+    probability (κ-1)/M per pair otherwise), inflating E[SᵀS] above I.
+    That is the App.-C tradeoff the paper documents: single-pass reads,
+    no column-regularity, no OSE guarantee.
+    """
 
     name = "blockrow"
+    unbiased = False
 
     def __init__(self, d, k, kappa: int = 4, s: int = 2, seed: int = 0,
                  impl: str = "auto", dtype: str = "float32"):
@@ -364,6 +437,8 @@ SKETCH_FAMILIES = {
     "blockperm_bf16": BlockPermBf16Sketch,
     "localized": LocalizedSketch,
     "blockrow": BlockRowSketch,
+    "countsketch": CountSketch,
+    "graph": GraphSketch,
 }
 
 

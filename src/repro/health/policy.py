@@ -128,12 +128,16 @@ class RedrawPolicy:
         return status == _report.DEGRADED and self.accept_degraded
 
     def plan_for(self, attempt: Attempt, d: int, n: int, *, s: int,
-                 dtype: str = "float32", k: Optional[int] = None):
+                 dtype: str = "float32", k: Optional[int] = None,
+                 family: str = "blockperm"):
         """The ``BlockPermPlan`` of one attempt.
 
         ``k`` pins the sketch rows of attempt 0 (the caller's explicit
         request); escalated attempts size ``k`` from the rung's sampling
         factor so a ``sampling_bump`` actually grows the sketch.
+        ``family`` carries the sketch construction through every rung, so
+        a guarded countsketch/graph solve escalates within its own family
+        (``kappa_bump`` rungs are inert there — global plans pin κ=M).
         """
         from repro.configs import flashsketch_paper         # lazy: no cycle
         from repro.core.blockperm import make_plan
@@ -141,7 +145,7 @@ class RedrawPolicy:
             k = flashsketch_paper.solver_sketch_rows(
                 n, attempt.sampling_factor)
         return make_plan(d, k, kappa=attempt.kappa, s=s, seed=attempt.seed,
-                         dtype=dtype)
+                         dtype=dtype, family=family)
 
     def record(self, attempt: Attempt) -> None:
         """Count the escalation action in the global registry."""

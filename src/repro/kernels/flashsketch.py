@@ -51,7 +51,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
-from repro.core.blockperm import BlockPermPlan
+from repro.core.blockperm import GLOBAL_FAMILY_TAG, BlockPermPlan
 from repro.kernels import ref as kref
 
 
@@ -109,6 +109,30 @@ def _blockrow_table(plan: BlockPermPlan) -> np.ndarray:
         return np.asarray(kref.blockrow_wiring(plan))
 
 
+@functools.lru_cache(maxsize=None)
+def _global_table(M: int) -> np.ndarray:
+    """(M, M) all-blocks wiring for the GLOBAL families (κ == M):
+    ``tab[ℓ, ·] = ℓ`` — every input block feeds every output block.  The
+    SAME table serves the forward (program g pipelines input block ℓ) and
+    the transpose (program hb pipelines output block g = ℓ): both
+    directions of the complete bipartite wiring enumerate all M blocks."""
+    return np.tile(np.arange(M, dtype=np.int32)[:, None], (1, M))
+
+
+def _fwd_phi_and_table(plan: BlockPermPlan):
+    """(phi_fn, prefetch table) for the forward/gather launch."""
+    if plan.is_global:
+        return _phi_global_tile, _global_table(plan.M)
+    return _phi_tile, _fwd_neighbor_table(plan)
+
+
+def _transpose_phi_and_table(plan: BlockPermPlan):
+    """(phi_fn, prefetch table) for the transpose launch."""
+    if plan.is_global:
+        return _phi_global_tile, _global_table(plan.M)
+    return _phi_tile, _inv_neighbor_table(plan)
+
+
 # ---------------------------------------------------------------------------
 # In-kernel Φ construction (must match ref._phi_all_blocks bit-for-bit).
 # ---------------------------------------------------------------------------
@@ -130,6 +154,31 @@ def _phi_tile(plan: BlockPermPlan, g, h) -> jnp.ndarray:
         rows = i * chunk + hashing.hash_mod(hsh, chunk)
         signs = hashing.hash_to_unit_sign(hsh)
         phi = phi + jnp.where(r_iota == rows, signs, 0.0)
+    return phi
+
+
+def _phi_global_tile(plan: BlockPermPlan, g, h) -> jnp.ndarray:
+    """Block (g, h) of a GLOBAL family's S (countsketch/graph), entries
+    ±1/0.  Nonzero i of global column ``h·Bc + u`` lands at GLOBAL row
+    ``i·(k_pad/s) + hash mod (k_pad/s)``; rows outside block g never match
+    the local row iota, so the masking is free.  Matches
+    ``core.blockperm.dense_global_block`` bit-for-bit."""
+    u = jax.lax.broadcasted_iota(jnp.int32, (1, plan.Bc), 1)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (plan.Br, plan.Bc), 0)
+    chunk = plan.chunk                      # k_pad // s (global partition)
+    gcol = h * plan.Bc + u                  # global column indices
+    phi = jnp.zeros((plan.Br, plan.Bc), jnp.float32)
+    for i in range(plan.s):
+        hsh = hashing.hash_words(
+            np.uint32(plan.seed),
+            np.uint32(GLOBAL_FAMILY_TAG),
+            gcol.astype(jnp.uint32),
+            np.uint32(i),
+        )                                              # (1, Bc)
+        rows = i * chunk + hashing.hash_mod(hsh, chunk)
+        local = rows - g * plan.Br
+        signs = hashing.hash_to_unit_sign(hsh)
+        phi = phi + jnp.where(r_iota == local, signs, 0.0)
     return phi
 
 
@@ -157,9 +206,13 @@ def stacked_phi(plan: BlockPermPlan, g, neighbors, *, rows_pattern: bool = False
     """The fused tile [Φ_{g,h₁} | … | Φ_{g,h_κ}] ∈ (Br, κ·Bc).
 
     Exactly the construction the v2 kernel writes into VMEM scratch at
-    ``j == 0`` (exposed for bit-exactness tests against ``dense_block``).
+    ``j == 0`` (exposed for bit-exactness tests against ``dense_block`` /
+    ``dense_global_block`` — the family picks the tile builder).
     """
-    tile_fn = _phi_rows_tile if rows_pattern else _phi_tile
+    if rows_pattern:
+        tile_fn = _phi_rows_tile
+    else:
+        tile_fn = _phi_global_tile if plan.is_global else _phi_tile
     g = jnp.asarray(g, jnp.int32)
     return jnp.concatenate(
         [tile_fn(plan, g, jnp.asarray(h, jnp.int32)) for h in neighbors], axis=1
@@ -193,7 +246,8 @@ def _fused_fwd_kernel(tab_ref, *refs, plan: BlockPermPlan, scale, phi_fn):
     ) * scale
 
 
-def _fused_transpose_kernel(tab_ref, *refs, plan: BlockPermPlan, scale):
+def _fused_transpose_kernel(tab_ref, *refs, plan: BlockPermPlan, scale,
+                            phi_fn):
     y_refs = refs[: plan.kappa]
     o_ref = refs[plan.kappa]
     phi_ref = refs[plan.kappa + 1]          # (κ·Br, Bc) VMEM scratch
@@ -205,7 +259,7 @@ def _fused_transpose_kernel(tab_ref, *refs, plan: BlockPermPlan, scale):
         for ell in range(plan.kappa):
             g = tab_ref[ell, hb]            # g = π_{ℓ+1}^{-1}(hb)
             phi_ref[ell * plan.Br:(ell + 1) * plan.Br, :] = (
-                _phi_tile(plan, g, hb).astype(phi_ref.dtype)
+                phi_fn(plan, g, hb).astype(phi_ref.dtype)
             )
 
     stacked = jnp.concatenate(
@@ -526,11 +580,12 @@ def flashsketch_pallas(
         interpret = _should_interpret()
     d_pad, n = A.shape
     assert d_pad == plan.d_pad, (d_pad, plan.d_pad)
+    phi_fn, tab = _fwd_phi_and_table(plan)
     kernel = functools.partial(
-        _fused_fwd_kernel, plan=plan, scale=plan.scale, phi_fn=_phi_tile
+        _fused_fwd_kernel, plan=plan, scale=plan.scale, phi_fn=phi_fn
     )
     return _run_fused(
-        plan, kernel, _fwd_neighbor_table(plan), _stream(plan, A),
+        plan, kernel, tab, _stream(plan, A),
         in_block=(plan.Bc, tn), out_block=(plan.Br, tn),
         phi_shape=(plan.Br, plan.kappa * plan.Bc),
         out_rows=plan.k_pad, n=n, tn=tn, interpret=interpret,
@@ -549,9 +604,11 @@ def flashsketch_transpose_pallas(
         interpret = _should_interpret()
     k_pad, n = Y.shape
     assert k_pad == plan.k_pad, (k_pad, plan.k_pad)
-    kernel = functools.partial(_fused_transpose_kernel, plan=plan, scale=plan.scale)
+    phi_fn, tab = _transpose_phi_and_table(plan)
+    kernel = functools.partial(_fused_transpose_kernel, plan=plan,
+                               scale=plan.scale, phi_fn=phi_fn)
     return _run_fused(
-        plan, kernel, _inv_neighbor_table(plan), _stream(plan, Y),
+        plan, kernel, tab, _stream(plan, Y),
         in_block=(plan.Br, tn), out_block=(plan.Bc, tn),
         phi_shape=(plan.kappa * plan.Br, plan.Bc),
         out_rows=plan.d_pad, n=n, tn=tn, interpret=interpret,
@@ -586,12 +643,13 @@ def flashsketch_pallas_gather(
         interpret = _should_interpret()
     _, n = A.shape
     assert row_map.shape == (plan.d_pad,), (row_map.shape, plan.d_pad)
+    phi_fn, tab = _fwd_phi_and_table(plan)
     kernel = functools.partial(
-        _fused_gather_kernel, plan=plan, scale=plan.scale, phi_fn=_phi_tile,
+        _fused_gather_kernel, plan=plan, scale=plan.scale, phi_fn=phi_fn,
         tn=tn, n_rem=n % tn,
     )
     return _run_fused_gather(
-        plan, kernel, _fwd_neighbor_table(plan), row_map, _stream(plan, A),
+        plan, kernel, tab, row_map, _stream(plan, A),
         out_block=(plan.Br, tn), out_rows=plan.k_pad, n=n, tn=tn,
         interpret=interpret,
     )
@@ -738,11 +796,12 @@ def flashsketch_pallas_partial(
 # equivalence tests and the baseline for kernel_bench; always fp32.
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel_v1(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale):
+def _fwd_kernel_v1(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale,
+                   phi_fn=_phi_tile):
     g = pl.program_id(1)
     ell = pl.program_id(2)
     h = tab_ref[ell, g]
-    phi = _phi_tile(plan, g, h)
+    phi = phi_fn(plan, g, h)
     contrib = jnp.dot(
         phi, a_ref[...].astype(jnp.float32),
         preferred_element_type=jnp.float32,
@@ -757,11 +816,12 @@ def _fwd_kernel_v1(tab_ref, a_ref, o_ref, *, plan: BlockPermPlan, scale):
         o_ref[...] += contrib
 
 
-def _transpose_kernel_v1(tab_ref, y_ref, o_ref, *, plan: BlockPermPlan, scale):
+def _transpose_kernel_v1(tab_ref, y_ref, o_ref, *, plan: BlockPermPlan,
+                         scale, phi_fn=_phi_tile):
     hb = pl.program_id(1)               # input block index (output of Sᵀ)
     ell = pl.program_id(2)
     g = tab_ref[ell, hb]                # g = f^{-ℓ}(hb)
-    phi = _phi_tile(plan, g, hb)        # (Br, Bc)
+    phi = phi_fn(plan, g, hb)           # (Br, Bc)
     contrib = jnp.dot(
         phi.T, y_ref[...].astype(jnp.float32),
         preferred_element_type=jnp.float32,
@@ -807,9 +867,11 @@ def flashsketch_pallas_v1(
         interpret = _should_interpret()
     d_pad, n = A.shape
     assert d_pad == plan.d_pad, (d_pad, plan.d_pad)
-    kernel = functools.partial(_fwd_kernel_v1, plan=plan, scale=plan.scale)
+    phi_fn, tab = _fwd_phi_and_table(plan)
+    kernel = functools.partial(_fwd_kernel_v1, plan=plan, scale=plan.scale,
+                               phi_fn=phi_fn)
     return _run_v1(
-        plan, kernel, _fwd_neighbor_table(plan), A,
+        plan, kernel, tab, A,
         in_block=(plan.Bc, tn), out_block=(plan.Br, tn),
         out_rows=plan.k_pad, n=n, tn=tn, interpret=interpret,
     )
@@ -827,9 +889,11 @@ def flashsketch_transpose_pallas_v1(
         interpret = _should_interpret()
     k_pad, n = Y.shape
     assert k_pad == plan.k_pad, (k_pad, plan.k_pad)
-    kernel = functools.partial(_transpose_kernel_v1, plan=plan, scale=plan.scale)
+    phi_fn, tab = _transpose_phi_and_table(plan)
+    kernel = functools.partial(_transpose_kernel_v1, plan=plan,
+                               scale=plan.scale, phi_fn=phi_fn)
     return _run_v1(
-        plan, kernel, _inv_neighbor_table(plan), Y,
+        plan, kernel, tab, Y,
         in_block=(plan.Br, tn), out_block=(plan.Bc, tn),
         out_rows=plan.d_pad, n=n, tn=tn, interpret=interpret,
     )

@@ -203,7 +203,8 @@ class Lowering:
             "version": self.version,
             "plan": {"d": p.d, "d_pad": p.d_pad, "k_pad": p.k_pad,
                      "M": p.M, "Br": p.Br, "Bc": p.Bc,
-                     "kappa": p.kappa, "s": p.s, "dtype": p.dtype},
+                     "kappa": p.kappa, "s": p.s, "dtype": p.dtype,
+                     "family": p.family},
         }
 
 
@@ -257,10 +258,21 @@ def _validate(plan: BlockPermPlan, spec: LaunchSpec) -> None:
         raise ValueError(
             f"gather-fused loads exist for {GATHER_OPS} only, got "
             f"op={spec.op!r}")
+    if plan.is_global and spec.op == "blockrow":
+        raise ValueError(
+            f"FLASHBLOCKROW is a blockperm-wiring construction; family "
+            f"{plan.family!r} has no blockrow formulation")
     if spec.shard != "none":
         if spec.devices < 1:
             raise ValueError(f"devices must be >= 1, got {spec.devices}")
         if spec.shard == "row":
+            if plan.is_global:
+                raise ValueError(
+                    f"row-sharding has no compact partial for global "
+                    f"family {plan.family!r}: every input block feeds "
+                    f"every output block, so a per-device block slab "
+                    f"still touches the full output (shard the column "
+                    f"or batch axis instead)")
             if spec.op == "transpose":
                 raise ValueError(
                     "row-sharding has no partial transpose formulation")

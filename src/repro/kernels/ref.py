@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing, wiring
-from repro.core.blockperm import BlockPermPlan
+from repro.core.blockperm import BlockPermPlan, global_rows_signs
 
 
 def pad_input(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
@@ -52,8 +52,38 @@ def _phi_all_blocks(plan: BlockPermPlan, h_of_g: jnp.ndarray) -> jnp.ndarray:
     return phi
 
 
+def _global_fwd_ref(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
+    """Y = S A for a GLOBAL family (countsketch/graph): scatter-add of each
+    padded input row to its s hashed global output rows."""
+    Ap = pad_input(plan, A).astype(jnp.float32)
+    u = jnp.arange(plan.d_pad, dtype=jnp.int32)
+    Y = jnp.zeros((plan.k_pad, Ap.shape[1]), jnp.float32)
+    for i in range(plan.s):
+        rows, signs = global_rows_signs(plan, u, i)
+        Y = Y.at[rows].add(signs[:, None] * Ap)
+    return Y[: plan.k] * plan.scale
+
+
+def _global_transpose_ref(plan: BlockPermPlan, Y: jnp.ndarray) -> jnp.ndarray:
+    """X = Sᵀ Y for a GLOBAL family: each padded input row gathers its s
+    hashed output rows back."""
+    Yp = Y
+    if Y.shape[0] != plan.k_pad:
+        Yp = jnp.pad(Y, ((0, plan.k_pad - Y.shape[0]), (0, 0)))
+    Yp = Yp.astype(jnp.float32)
+    u = jnp.arange(plan.d_pad, dtype=jnp.int32)
+    X = jnp.zeros((plan.d_pad, Yp.shape[1]), jnp.float32)
+    for i in range(plan.s):
+        rows, signs = global_rows_signs(plan, u, i)
+        X = X + signs[:, None] * Yp[rows]
+    return X[: plan.d] * plan.scale
+
+
 def flashsketch_ref(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
-    """Y = S A for S ~ BLOCKPERM-SJLT(plan). A: (d, n) -> Y: (k, n)."""
+    """Y = S A for S ~ plan (BLOCKPERM-SJLT or a global family).
+    A: (d, n) -> Y: (k, n)."""
+    if plan.is_global:
+        return _global_fwd_ref(plan, A)
     n = A.shape[1]
     Ap = pad_input(plan, A).astype(jnp.float32)
     A_blocks = Ap.reshape(plan.M, plan.Bc, n)
@@ -72,6 +102,8 @@ def flashsketch_ref(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
 
 def flashsketch_transpose_ref(plan: BlockPermPlan, Y: jnp.ndarray) -> jnp.ndarray:
     """X = Sᵀ Y.  Y: (k, n) -> X: (d, n).  (VJP of flashsketch_ref wrt A.)"""
+    if plan.is_global:
+        return _global_transpose_ref(plan, Y)
     n = Y.shape[1]
     Yp = Y
     if Y.shape[0] != plan.k_pad:

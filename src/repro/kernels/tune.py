@@ -109,9 +109,9 @@ def cache_key(plan: BlockPermPlan, n: int, variant: str,
     blocks, one DMA'd gather scratch) and the bucketed batch count folded
     into the column axis (a B-example batched launch has B·n effective
     columns, which moves the tile-width sweet spot)."""
-    return (_backend_tag(interpret), variant, plan.d_pad, plan.k_pad, plan.M,
-            plan.Br, plan.kappa, plan.s, _n_bucket(n), plan.dtype,
-            variant in GATHER_VARIANTS, _n_bucket(batch))
+    return (_backend_tag(interpret), variant, plan.family, plan.d_pad,
+            plan.k_pad, plan.M, plan.Br, plan.kappa, plan.s, _n_bucket(n),
+            plan.dtype, variant in GATHER_VARIANTS, _n_bucket(batch))
 
 
 def clear_cache() -> None:

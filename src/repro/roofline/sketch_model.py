@@ -103,6 +103,13 @@ def kernel_cost(
     ``tn·itemsize`` bytes per column tile, charged at transaction
     granularity (``hw.HBM_TRANSACTION_BYTES`` floor) — wide tiles amortize
     the transaction, skinny per-example launches eat it whole.
+
+    Global families (countsketch/graph) need NO special casing: their plans
+    carry ``kappa == M`` (every input block feeds every output block), so
+    the formulas below price them verbatim — MXU work becomes the dense-like
+    ``2·k_pad·d_pad·n`` (the structural reason BlockPerm wins the Pareto
+    race on the matrix unit), the input is streamed M times, and the Φ build
+    count ``κ·M = M²`` matches the M² tiles the fused kernel materializes.
     """
     if version not in ("v1", "v2"):
         raise ValueError(f"version must be 'v1' or 'v2', got {version!r}")

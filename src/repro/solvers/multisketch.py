@@ -19,7 +19,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.blockperm import BlockPermPlan, make_plan
+from repro.core.blockperm import (BlockPermPlan, FAMILY_DEFAULT_S,
+                                  make_plan)
 from repro.kernels import ops
 from repro.solvers import sketch_precondition as sp
 
@@ -27,14 +28,46 @@ from repro.solvers import sketch_precondition as sp
 _ROUND_STRIDE = 0x9E3779B1
 _SLOT_STRIDE = 0x85EBCA77
 
+# Seed space is 31 bits; the top 4 bits are a STREAM id, the low 27 the
+# mixed draw.  Each sketch family gets its own stream, so independent
+# draws across families provably come from disjoint seed ranges — no
+# collision is possible between e.g. a countsketch redraw rung and a
+# blockperm one, whatever the (round, slot) mixing lands on.
+_STREAM_SHIFT = 27
+_STREAM_MASK = 0xF
+_MIX_MASK = (1 << _STREAM_SHIFT) - 1
 
-def derive_seed(master_seed: int, round_idx: int, slot: int) -> int:
+_FAMILY_STREAMS = {"blockperm": 0, "countsketch": 1, "graph": 2}
+
+
+def family_stream(family: str) -> int:
+    """Disjoint 4-bit seed-stream id of a sketch family."""
+    try:
+        return _FAMILY_STREAMS[family]
+    except KeyError:
+        raise ValueError(
+            f"no seed stream registered for family {family!r}; known: "
+            f"{sorted(_FAMILY_STREAMS)}") from None
+
+
+def derive_seed(master_seed: int, round_idx: int, slot: int,
+                *, stream: Optional[int] = None) -> int:
     """Seed of sketch ``slot`` in restart round ``round_idx`` — a fixed
     injective-in-practice mixing of the master seed, so restarts are
-    reproducible and all draws are distinct."""
-    return (master_seed
-            + _ROUND_STRIDE * (round_idx + 1)
-            + _SLOT_STRIDE * (slot + 1)) & 0x7FFFFFFF
+    reproducible and all draws are distinct.
+
+    ``stream`` selects one of 16 provably disjoint seed ranges (the top 4
+    bits of the 31-bit seed space; use ``family_stream(name)`` for the
+    per-family ids).  ``None`` inherits the master seed's own stream bits,
+    so raw small master seeds keep deriving in stream 0 exactly as before
+    the partition existed.
+    """
+    mixed = (master_seed
+             + _ROUND_STRIDE * (round_idx + 1)
+             + _SLOT_STRIDE * (slot + 1)) & _MIX_MASK
+    if stream is None:
+        stream = (master_seed >> _STREAM_SHIFT) & _STREAM_MASK
+    return ((stream & _STREAM_MASK) << _STREAM_SHIFT) | mixed
 
 
 def multisketch_plans(
@@ -43,15 +76,25 @@ def multisketch_plans(
     t: int,
     *,
     kappa: int = 4,
-    s: int = 2,
+    s: Optional[int] = None,
     seed: int = 0,
     round_idx: int = 0,
     dtype: str = "float32",
+    family: str = "blockperm",
 ) -> Tuple[BlockPermPlan, ...]:
-    """``t`` independent-seed plans of ``k_each`` rows each (total t·k_each)."""
+    """``t`` independent-seed plans of ``k_each`` rows each (total t·k_each).
+
+    ``family`` picks the sketch construction, its canonical per-column
+    nonzero count (``s=None`` resolves to ``FAMILY_DEFAULT_S[family]`` —
+    countsketch means s=1, graph means s=4) AND its disjoint seed stream,
+    so mixing families under one master seed never collides draws."""
+    stream = family_stream(family)     # validates family before s lookup
+    if s is None:
+        s = FAMILY_DEFAULT_S[family]
     return tuple(
         make_plan(d, k_each, kappa=kappa, s=s,
-                  seed=derive_seed(seed, round_idx, i), dtype=dtype)
+                  seed=derive_seed(seed, round_idx, i, stream=stream),
+                  dtype=dtype, family=family)
         for i in range(t)
     )
 

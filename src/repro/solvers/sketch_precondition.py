@@ -37,7 +37,8 @@ import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
 from repro.configs import flashsketch_paper
-from repro.core.blockperm import BlockPermPlan, make_plan
+from repro.core.blockperm import (BlockPermPlan, FAMILY_DEFAULT_S,
+                                  make_plan)
 from repro.kernels import lowering, ops
 
 
@@ -389,9 +390,10 @@ def sketch_precondition_lstsq(
     *,
     k: Optional[int] = None,
     kappa: int = 4,
-    s: int = 2,
+    s: Optional[int] = None,
     seed: int = 0,
     dtype: str = "float32",
+    family: str = "blockperm",
     sampling_factor: float = 4.0,
     factorization: str = "qr",
     method: str = "lsqr",
@@ -412,6 +414,15 @@ def sketch_precondition_lstsq(
       kappa, s, seed, dtype: BlockPerm-SJLT knobs (see ``make_plan``);
         κ/s/dtype trade sketch speed against preconditioner quality, i.e.
         against LSQR iteration count.
+      family: sketch construction ("blockperm" | "countsketch" | "graph")
+        — the preconditioning pipeline is family-parametric; the family
+        rides the plan through every guard rung and re-sketch restart.
+        ``s=None`` resolves to the family's CANONICAL nonzero count
+        (``FAMILY_DEFAULT_S``: blockperm 2, countsketch 1, graph 4) and
+        the plan seed is drawn from the family's disjoint seed stream —
+        the same construction ``variants.make_sketch(family, ...)``
+        builds, so e.g. countsketch and graph solves under one master
+        seed are genuinely different sketches.
       factorization: "qr" | "chol" (see ``ops.sketch_qr``).
       method: "lsqr" | "cg".
       tol / max_iters: iteration stopping rule.
@@ -434,10 +445,20 @@ def sketch_precondition_lstsq(
       made visible (κ=1 sketches are fastest but precondition worst).
     """
     d, n = A.shape
+    if s is None:
+        # unknown families fall through to make_plan/family_stream, whose
+        # ValueError names the valid set
+        s = FAMILY_DEFAULT_S.get(family, 2)
+    if plan is None and family != "blockperm":
+        # match variants.make_sketch: non-blockperm families draw their
+        # plan seed from the family's disjoint stream
+        from repro.solvers.multisketch import derive_seed, family_stream
+        seed = derive_seed(seed, 0, 0, stream=family_stream(family))
     if not guard:
         if plan is None:
             plan = make_plan(d, k or default_sketch_rows(n, sampling_factor),
-                             kappa=kappa, s=s, seed=seed, dtype=dtype)
+                             kappa=kappa, s=s, seed=seed, dtype=dtype,
+                             family=family)
         _, R = ops.sketch_qr(plan, A.astype(jnp.float32), impl,
                              factorization=factorization)
         res = _run_iteration(A, b, R.astype(b.dtype), method, tol, max_iters)
@@ -459,6 +480,7 @@ def sketch_precondition_lstsq(
     base_kappa = plan.kappa if plan is not None else kappa
     base_s = plan.s if plan is not None else s
     base_k = plan.k_req if plan is not None else k
+    base_family = plan.family if plan is not None else family
 
     def draw_and_check(p):
         """Sketch + factor + guard verdict for one attempt's plan."""
@@ -485,7 +507,8 @@ def sketch_precondition_lstsq(
         if attempt.index == 0 and plan is not None:
             p = plan
         else:
-            p = pol.plan_for(attempt, d, n, s=base_s, dtype=dtype, k=base_k)
+            p = pol.plan_for(attempt, d, n, s=base_s, dtype=dtype, k=base_k,
+                             family=base_family)
         pol.record(attempt)
         if attempt.index > 0:
             rpt.act(attempt.describe())
@@ -511,13 +534,15 @@ def sketch_precondition_lstsq(
     # whose iteration still diverges means the draw was bad in a way the
     # cheap guards missed; throw it away and re-draw from a disjoint seed
     # stream.
-    from repro.solvers.multisketch import derive_seed   # lazy: no cycle
+    from repro.solvers.multisketch import derive_seed, \
+        family_stream   # lazy: no cycle
     restarts = 0
     while _diverged(res) and restarts < pol.max_resketch_restarts:
         restarts += 1
-        new_seed = derive_seed(p.seed, pol.budget + restarts, 3)
+        new_seed = derive_seed(p.seed, pol.budget + restarts, 3,
+                               stream=family_stream(p.family))
         p = make_plan(d, p.k_req, kappa=p.kappa, s=p.s, seed=new_seed,
-                      dtype=dtype)
+                      dtype=dtype, family=p.family)
         rpt.act(f"resketch_restart(seed={new_seed})")
         health_report.record("policy.resketch_restart")
         R, verdict = draw_and_check(p)

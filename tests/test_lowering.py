@@ -52,6 +52,12 @@ def _plans():
         "mesh_shrink": plan_for_mesh(65_536, 1024, 8, kappa=4),
         # partial (Br, Bc) Φ tile busts VMEM: row-sharded oracle fallback
         "mesh_big": plan_for_mesh(262_144, 1024, 8, kappa=2),
+        # global families (κ = M plans) through the SAME engine: the
+        # competitor-family grid (no blockrow, no row-shard — both raise)
+        "count": make_plan(256, 64, s=1, block_rows=8, seed=4,
+                           family="countsketch"),
+        "graph": make_plan(256, 64, s=4, block_rows=8, seed=4,
+                           family="graph"),
     }
 
 
@@ -70,6 +76,21 @@ def _grid():
                             cases.append(("pinned", dict(
                                 op=op, n=n, impl=impl, dtype=dtype,
                                 gather=gather, batch=batch)))
+    # global families ride the single-device grid untouched: op × impl ×
+    # dtype × gather × batch (+ one ragged-n point).  blockrow and
+    # shard="row" are validation errors for them, not grid points.
+    for plan_name in ("count", "graph"):
+        for op in ("fwd", "transpose"):
+            for impl in ("pallas", "xla"):
+                for dtype in (None, "bfloat16"):
+                    for gather in (False, True):
+                        if gather and op not in lowering.GATHER_OPS:
+                            continue
+                        for batch in (1, 8):
+                            cases.append((plan_name, dict(
+                                op=op, n=64, impl=impl, dtype=dtype,
+                                gather=gather, batch=batch)))
+        cases.append((plan_name, dict(op="fwd", n=33, impl="pallas")))
     # the downgrade ladder on the oversized plan
     for spec in (
         dict(op="fwd", n=8, impl="pallas"),               # v2 -> v1
@@ -176,6 +197,28 @@ def test_cost_of_agrees_with_legacy_kernel_cost():
         assert got == want, (plan_name, spec_kwargs)
         checked += 1
     assert checked > 100          # the grid really was traversed
+
+
+def test_cost_of_matches_family_cost_model_on_global_grid():
+    """The registered family's ``cost_model`` and the engine's
+    ``cost_of`` must price the SAME launch for the new global families,
+    and the κ = M realization must charge the known closed forms:
+    dense-like MXU work (2·k_pad·d_pad·n — every input block feeds every
+    output block) and A streamed M times."""
+    from repro.core.variants import SKETCH_FAMILIES
+    for name in ("countsketch", "graph"):
+        sk = SKETCH_FAMILIES[name](256, 64, seed=4, block_rows=8)
+        p = sk.plan
+        assert p.family == name and p.kappa == p.M
+        for n in (8, 64, 33):
+            lw = sk.lowering_for(n)
+            kc = sketch_model.cost_of(lw)
+            cm = sk.cost_model(n)
+            assert cm.flops == kc.mxu_flops
+            assert cm.hbm_bytes == kc.hbm_bytes
+            assert not cm.materializes_S
+            assert kc.mxu_flops == 2.0 * p.k_pad * p.d_pad * n
+            assert kc.hbm_bytes >= p.stream_itemsize * p.M * p.d_pad * n
 
 
 # ---------------------------------------------------------------------------
@@ -302,6 +345,36 @@ def test_spec_validation():
     with pytest.raises(ValueError, match="divide"):
         lowering.lower(plan, lowering.LaunchSpec(
             op="fwd", n=64, shard="row", devices=3))
+
+
+def test_global_family_spec_validation():
+    """Global families have no blockrow formulation and no compact
+    row-sharded partial — the engine must refuse, not mislower."""
+    cplan = make_plan(256, 64, s=1, block_rows=8, seed=4,
+                      family="countsketch")
+    with pytest.raises(ValueError, match="blockrow"):
+        lowering.lower(cplan, lowering.LaunchSpec(op="blockrow", n=64))
+    gplan = make_plan(4096, 1024, s=4, block_rows=256, seed=4,
+                      family="graph")
+    assert gplan.M % 4 == 0          # the divide check is not what fires
+    with pytest.raises(ValueError, match="compact partial"):
+        lowering.lower(gplan, lowering.LaunchSpec(
+            op="fwd", n=64, shard="row", devices=4))
+    # col/batch sharding needs no partial reduction — still allowed
+    lw = lowering.lower(gplan, lowering.LaunchSpec(
+        op="fwd", n=64, shard="col", devices=4))
+    assert lw.shard == "col"
+
+
+def test_tuner_cache_key_distinguishes_families():
+    """Identical geometry, different family ⇒ different tuner key: a
+    blockperm winner must never be served to a countsketch launch."""
+    bp = make_plan(256, 64, kappa=8, s=1, block_rows=8, seed=4)
+    cs = make_plan(256, 64, s=1, block_rows=8, seed=4,
+                   family="countsketch")
+    geom = lambda p: (p.d_pad, p.k_pad, p.M, p.Br, p.kappa, p.s, p.dtype)
+    assert geom(bp) == geom(cs)      # the families differ ONLY by family
+    assert tune.cache_key(bp, 64, "fwd") != tune.cache_key(cs, 64, "fwd")
 
 
 def test_execute_guards():

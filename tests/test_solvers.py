@@ -166,6 +166,61 @@ def test_multisketch_restart_determinism(problem):
     assert len(set(flat)) == len(flat)
 
 
+def test_derive_seed_family_streams_never_collide():
+    """Mixing sketch families under ONE master seed must draw from
+    provably disjoint seed streams — across families AND across the
+    redraw/escalation rungs each family may climb (regression: before the
+    stream partition, a countsketch draw could reuse a blockperm seed and
+    correlate the hash tables)."""
+    from repro.solvers.multisketch import (_STREAM_MASK, _STREAM_SHIFT,
+                                           derive_seed, family_stream)
+    families = ("blockperm", "countsketch", "graph")
+    assert len({family_stream(f) for f in families}) == len(families)
+    master, seen = 12345, {}
+    for family in families:
+        stream = family_stream(family)
+        for rnd in range(8):          # restart rounds / ladder indices
+            for slot in range(4):     # redraw / κ / γ / resketch slots
+                s = derive_seed(master, rnd, slot, stream=stream)
+                # the stream id is recoverable from the seed's top bits
+                assert (s >> _STREAM_SHIFT) & _STREAM_MASK == stream
+                assert s not in seen, ((family, rnd, slot), seen.get(s))
+                seen[s] = (family, rnd, slot)
+    assert len(seen) == len(families) * 8 * 4
+    # stream-less derivation inherits the master's stream: raw small
+    # master seeds (the historical call sites) stay in stream 0 …
+    assert (derive_seed(master, 0, 0) >> _STREAM_SHIFT) & _STREAM_MASK == 0
+    # … and re-deriving from an already-derived seed STAYS in-family, so
+    # escalation ladders never leak across the partition
+    s1 = derive_seed(master, 0, 0, stream=family_stream("graph"))
+    s2 = derive_seed(s1, 3, 1)
+    assert (s2 >> _STREAM_SHIFT) & _STREAM_MASK == family_stream("graph")
+    with pytest.raises(ValueError, match="no seed stream registered"):
+        family_stream("nope")
+
+
+def test_family_solver_builds_the_registered_construction(problem):
+    """``sketch_precondition_lstsq(family=...)`` must build THE family the
+    registry names — canonical s (countsketch 1, graph 4) and the
+    family's stream-derived seed, exactly as ``variants.make_sketch``
+    does (regression: the solver used to forward the generic s=2 default
+    and the raw seed, making countsketch and graph solves bitwise
+    identical)."""
+    from repro.core.variants import make_sketch
+    from repro.solvers.sketch_precondition import sketch_precondition_lstsq
+    A, b = problem
+    results = {}
+    for family in ("countsketch", "graph"):
+        res = sketch_precondition_lstsq(A, b, family=family, seed=3,
+                                        tol=1e-6)
+        p = res.lowering.plan
+        ref = make_sketch(family, A.shape[0], p.k_req, seed=3).plan
+        assert (p.family, p.s, p.seed) == (ref.family, ref.s, ref.seed)
+        assert res.converged
+        results[family] = np.asarray(res.x)
+    assert not np.array_equal(results["countsketch"], results["graph"])
+
+
 def test_multisketch_converges(problem, unprecond_iters):
     A, b = problem
     res = multisketch_lstsq(A, b, seed=0, tol=1e-5)

@@ -11,8 +11,24 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need the 'test' extra")
-from hypothesis import given, settings, strategies as st
+# hypothesis gates only the @given property tests — the statistical and
+# closed-form checks below run without the 'test' extra installed
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    class _NoStrategy:
+        """Placeholder so module-level strategy expressions still build."""
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NoStrategy()
+
+    def given(*a, **k):
+        return pytest.mark.skip(
+            reason="property tests need the 'test' extra (hypothesis)")
+
+    def settings(*a, **k):
+        return lambda f: f
 
 from repro.core import coherence, hashing, wiring
 from repro.core.blockperm import make_plan
@@ -93,6 +109,49 @@ def test_ose_error_scaling(k, rng):
     mean = np.mean(errs)
     bound = 3.0 * np.sqrt(r / k) + 0.1
     assert mean < bound, (mean, bound)
+
+
+@pytest.mark.slow
+def test_countsketch_heavy_tail_vs_blockperm_ose(rng):
+    """Family quality ordering behind the Pareto tournament's claimed
+    regimes: at MATCHED sketch size on a coherent subspace, CountSketch
+    (s = 1, one hashed nonzero per column) is heavy-tailed — often great,
+    occasionally catastrophic when heavy rows collide — while
+    BlockPerm-SJLT's κs = 8 nonzeros concentrate (Thm 6.2: the κ revisits
+    smooth coherence).  The sparse-graph family (s = 4) sits between.
+
+    Fixed seeds keep this deterministic; the margins (1.2× on the q90
+    tail, 3× on the std) are far inside the observed ratios (≈1.6× and
+    ≈5.8× over these 32 draws), so the test detects a family regression,
+    not sampling noise.
+    """
+    d, r, k, trials = 2048, 8, 128, 32
+    # coherent input: all energy in the first 2r rows — the regime where
+    # a single-nonzero hash can annihilate a heavy row pair
+    U = np.zeros((d, r))
+    U[:2 * r, :] = np.linalg.qr(rng.normal(size=(2 * r, r)))[0]
+    Uj = jnp.asarray(U, jnp.float32)
+
+    def errs(**kw):
+        out = []
+        for seed in range(trials):
+            plan = make_plan(d=d, k=k, seed=seed, **kw)
+            SU = kref.flashsketch_ref(plan, Uj)
+            out.append(coherence.ose_spectral_error(U, np.asarray(SU)))
+        return np.asarray(out)
+
+    bp = errs(kappa=4, s=2)
+    cs = errs(family="countsketch", s=1)
+    gr = errs(family="graph", s=4)
+    # BlockPerm's worst draw stays an embedding; CountSketch's does not
+    assert bp.max() < 0.6, bp.max()
+    assert cs.max() > 0.8, cs.max()
+    # tail and spread orderings with wide margins
+    assert np.quantile(cs, 0.9) > 1.2 * np.quantile(bp, 0.9)
+    assert cs.std() > 3.0 * bp.std()
+    # s = 4 already tames the tail: graph sits strictly between
+    assert gr.std() < cs.std() and gr.max() < cs.max()
+    assert gr.max() < 0.7, gr.max()
 
 
 def test_ose_error_improves_with_k(rng):

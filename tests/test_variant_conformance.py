@@ -1,0 +1,158 @@
+"""Registry-wide conformance suite: every sketch family, the same battery.
+
+Parametrized over ``repro.core.variants.SKETCH_FAMILIES`` — a family
+enrolls in the FULL battery by registering, with no new test code:
+
+  * unbiasedness      — E[SᵀS] = I over independent seeds;
+  * Frobenius band    — ‖SA‖_F/‖A‖_F inside a fixed-seed isometry band;
+  * bit-determinism   — two instances from one seed agree bitwise;
+  * VJP round-trip    — the apply's VJP equals Sᵀ of the dense-materialized
+                        oracle (S recovered by sketching the identity);
+  * ragged-n          — a non-tile-aligned column count equals the aligned
+                        launch's shared prefix (in-kernel tail masking);
+  * gather fusion     — ``apply_gather(A, idx)`` == materialize-then-sketch.
+
+Families whose constructor takes ``impl`` (the engine-lowered ones) run
+the exactness checks through the Pallas kernels (interpret mode off-TPU),
+so the battery exercises the real launch path, not just the oracle; the
+statistical checks use the default (fast) dispatch — they are properties
+of the sketch DISTRIBUTION, not of a kernel.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.variants import SKETCH_FAMILIES, make_sketch
+
+D, K, N = 96, 64, 24
+FAMILIES = sorted(SKETCH_FAMILIES)
+
+
+def _accepts_impl(name: str) -> bool:
+    return "impl" in inspect.signature(SKETCH_FAMILIES[name].__init__).parameters
+
+
+def _make(name: str, seed: int = 0, kernel: bool = False):
+    """One conformance instance; ``kernel=True`` pins the Pallas path for
+    families that have one (interpret mode on CPU)."""
+    kw = {"impl": "pallas"} if kernel and _accepts_impl(name) else {}
+    return make_sketch(name, D, K, seed=seed, **kw)
+
+
+def _emulate_stream(sk, A: jnp.ndarray) -> jnp.ndarray:
+    """Round A through the family's streaming dtype (bf16 families), so
+    dense-oracle comparisons see the precision the kernel streams at."""
+    plan = getattr(sk, "plan", None)
+    if plan is not None and plan.dtype != "float32":
+        return A.astype(plan.stream_dtype).astype(jnp.float32)
+    return A
+
+
+def _dense_S(sk) -> jnp.ndarray:
+    """The dense (k, d) S recovered by sketching the identity — the oracle
+    every exactness check compares against (linearity makes it exact)."""
+    return sk.apply(jnp.eye(D, dtype=jnp.float32))
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_unbiasedness_of_StS(family):
+    """E[SᵀS] = I_d: mean over independent seeds of the (d, d) Gram."""
+    if not SKETCH_FAMILIES[family].unbiased:
+        # declared-biased family (blockrow trades E[SᵀS] = I for
+        # single-pass reads) — assert the declaration is honest, i.e. the
+        # bias is real, so a silently-fixed family must re-enroll.
+        S = np.asarray(_make(family, seed=0).apply(
+            jnp.eye(D, dtype=jnp.float32)), np.float64)
+        assert abs(float(np.trace(S.T @ S)) / D - 1.0) > 0.1
+        pytest.skip(f"{family} declares unbiased=False (documented)")
+    n_seeds = 48
+    acc = np.zeros((D, D), np.float64)
+    for seed in range(n_seeds):
+        S = np.asarray(_make(family, seed=seed).apply(
+            jnp.eye(D, dtype=jnp.float32)), np.float64)
+        acc += S.T @ S
+    mean = acc / n_seeds
+    err = np.abs(mean - np.eye(D))
+    # diagonal concentrates like 1/√(k·n_seeds); fixed seeds keep this
+    # deterministic, the band is ~4σ for the widest-variance family (dense)
+    assert err.max() < 0.25, err.max()
+    assert np.abs(np.diag(mean) - 1.0).mean() < 0.05
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_frobenius_isometry_band(family, rng):
+    A = jnp.asarray(rng.normal(size=(D, N)), jnp.float32)
+    for seed in (0, 1, 2):
+        Y = _make(family, seed=seed).apply(A)
+        ratio = float(jnp.linalg.norm(Y) / jnp.linalg.norm(A))
+        # k = 64 gives √(2/k) ≈ 0.18 one-σ Frobenius fluctuation; the
+        # band is wide enough for every family incl. the fragile blockrow
+        assert 0.5 < ratio < 1.5, (family, seed, ratio)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_bit_determinism(family, rng):
+    A = jnp.asarray(rng.normal(size=(D, N)), jnp.float32)
+    Y1 = np.asarray(_make(family, seed=7, kernel=True).apply(A))
+    Y2 = np.asarray(_make(family, seed=7, kernel=True).apply(A))
+    assert np.array_equal(Y1, Y2), family
+    Y3 = np.asarray(_make(family, seed=8, kernel=True).apply(A))
+    assert not np.array_equal(Y1, Y3), f"{family}: seed ignored"
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_vjp_round_trip_vs_dense_oracle(family, rng):
+    """d/dA ⟨ct, S A⟩ = Sᵀ ct — the apply's VJP must equal the transpose
+    of the dense-materialized S.  Runs the DEFAULT dispatch: the engine
+    families' custom_vjp rule fires regardless of impl (the transpose op
+    is the rule), and forward-only kernels (blockrow's gather) stay
+    differentiable through their oracle."""
+    sk = _make(family, seed=3)
+    A = jnp.asarray(rng.normal(size=(D, N)), jnp.float32)
+    Y, vjp = jax.vjp(sk.apply, A)
+    ct = jnp.asarray(rng.normal(size=Y.shape), jnp.float32)
+    (got,) = vjp(ct)
+    S = _dense_S(sk)
+    # bf16-streaming families round the cotangent at the kernel boundary
+    want = S.T @ _emulate_stream(sk, ct)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=5e-4)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_ragged_n_exactness(family, rng):
+    """A ragged column count (n=19, no tile alignment) must equal the
+    shared prefix of the wider launch — tails are masked, never folded."""
+    sk = _make(family, seed=5, kernel=True)
+    A = jnp.asarray(rng.normal(size=(D, 32)), jnp.float32)
+    full = np.asarray(sk.apply(A))
+    ragged = np.asarray(sk.apply(A[:, :19]))
+    assert ragged.shape[1] == 19
+    np.testing.assert_allclose(ragged, full[:, :19], rtol=0, atol=1e-5)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_gather_fused_matches_materialize(family, rng):
+    """apply_gather(A, idx) == apply(A[idx]) — fused row-DMA kernels and
+    the base-class materializing fallback meet the same contract."""
+    sk = _make(family, seed=9, kernel=True)
+    d_src = D + 32
+    A = jnp.asarray(rng.normal(size=(d_src, N)), jnp.float32)
+    idx = jnp.asarray(rng.choice(d_src, size=D, replace=False), jnp.int32)
+    got = np.asarray(sk.apply_gather(A, idx))
+    want = np.asarray(sk.apply(A[idx]))
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-5)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_batched_apply_matches_loop(family, rng):
+    """apply_batched folds the stack into one launch; it must equal the
+    per-example loop exactly (columnwise linearity)."""
+    sk = _make(family, seed=11, kernel=True)
+    A = jnp.asarray(rng.normal(size=(3, D, N)), jnp.float32)
+    got = np.asarray(sk.apply_batched(A))
+    want = np.stack([np.asarray(sk.apply(A[b])) for b in range(3)])
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-5)
