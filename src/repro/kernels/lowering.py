@@ -41,6 +41,7 @@ The downgrade ladder (each step recorded in ``Lowering.downgrade``):
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -486,6 +487,10 @@ _LOWERING_CACHE: Dict[Tuple, Lowering] = {}
 # from older generations can never be valid again — keeping them keyed
 # by generation would only leak dead entries per tuner mutation).
 _CACHE_GEN: int = -1
+# Serializes the generation-check → flush → get/insert sequence: serving
+# workers lower concurrently, and an unguarded flush racing an insert can
+# resurrect a stale-tile record or die iterating a resizing dict.
+_MEMO_LOCK = threading.RLock()
 
 
 def lower(plan: BlockPermPlan, spec: LaunchSpec) -> Lowering:
@@ -498,24 +503,31 @@ def lower(plan: BlockPermPlan, spec: LaunchSpec) -> Lowering:
     which flushes the memo wholesale so stale tiles are never served.
     """
     global _CACHE_GEN
-    gen = tune.cache_generation()
-    if gen != _CACHE_GEN:
-        _LOWERING_CACHE.clear()
-        _CACHE_GEN = gen
-    key = (plan, spec, tune._backend_tag())
-    hit = _LOWERING_CACHE.get(key)
-    if hit is None:
-        hit = _lower(plan, spec, None)
-        _LOWERING_CACHE[key] = hit
+    with _MEMO_LOCK:
+        gen = tune.cache_generation()
+        if gen != _CACHE_GEN:
+            _LOWERING_CACHE.clear()
+            _CACHE_GEN = gen
+        hit = _LOWERING_CACHE.get((plan, spec, tune._backend_tag()))
+    if hit is not None:
+        return hit
+    hit = _lower(plan, spec, None)      # pure; safe outside the lock
+    with _MEMO_LOCK:
+        # only memoize against the generation we resolved under — if the
+        # tuner mutated mid-resolve, serve the result but do not cache it
+        if tune.cache_generation() == gen and _CACHE_GEN == gen:
+            _LOWERING_CACHE[(plan, spec, tune._backend_tag())] = hit
     return hit
 
 
 def clear_lowering_cache() -> None:
-    _LOWERING_CACHE.clear()
+    with _MEMO_LOCK:
+        _LOWERING_CACHE.clear()
 
 
 def lowering_cache_size() -> int:
-    return len(_LOWERING_CACHE)
+    with _MEMO_LOCK:
+        return len(_LOWERING_CACHE)
 
 
 def explain(plan: BlockPermPlan, spec: Optional[LaunchSpec] = None,

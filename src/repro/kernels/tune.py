@@ -32,6 +32,7 @@ import dataclasses
 import json
 import math
 import os
+import threading
 import time
 import warnings
 from typing import Dict, Iterable, Optional, Sequence, Tuple
@@ -62,6 +63,13 @@ class TuneResult:
 
 _CACHE: Dict[Tuple, TuneResult] = {}
 
+# Serializes every _CACHE mutation and keeps _bump_generation atomic with
+# the mutation it describes: the serving layer tunes/loads/saves from
+# worker threads, and an unguarded save_cache iterating _CACHE while
+# autotune inserts a winner dies with "dict changed size during
+# iteration".  RLock because load_cache(merge=False) calls clear_cache.
+_CACHE_LOCK = threading.RLock()
+
 # Bumped on every cache mutation (tuned win, JSON load, clear) so consumers
 # that memoize *derived* trace-time decisions — ``kernels.lowering``'s
 # record cache — know when a cached decision may have gone stale.
@@ -75,7 +83,8 @@ def cache_generation() -> int:
 
 def _bump_generation() -> None:
     global _GENERATION
-    _GENERATION += 1
+    with _CACHE_LOCK:
+        _GENERATION += 1
 
 
 def _n_bucket(n: int) -> int:
@@ -115,8 +124,9 @@ def cache_key(plan: BlockPermPlan, n: int, variant: str,
 
 
 def clear_cache() -> None:
-    _CACHE.clear()
-    _bump_generation()
+    with _CACHE_LOCK:
+        _CACHE.clear()
+        _bump_generation()
 
 
 def cache_size() -> int:
@@ -168,7 +178,8 @@ def lookup(plan: BlockPermPlan, n: int, variant: str = "fwd",
     or ``None``.  Every reader (``resolve_tn``, the lowering engine) and
     every writer (``autotune``/``autotune_plan``) shares ``cache_key``, so
     a batched write is never invisible to a batched read."""
-    return _CACHE.get(cache_key(plan, n, variant, interpret, batch=batch))
+    with _CACHE_LOCK:
+        return _CACHE.get(cache_key(plan, n, variant, interpret, batch=batch))
 
 
 def resolve_tn(plan: BlockPermPlan, n: int, variant: str = "fwd",
@@ -269,7 +280,8 @@ def autotune(
     if variant not in VARIANTS:
         raise ValueError(f"variant must be one of {VARIANTS}, got {variant!r}")
     key = cache_key(plan, n, variant, interpret, batch=batch)
-    hit = _CACHE.get(key)
+    with _CACHE_LOCK:
+        hit = _CACHE.get(key)
     if hit is not None and hit.source in ("tuned", "loaded"):
         return hit
     kernel = _KERNELS[variant]
@@ -296,8 +308,9 @@ def autotune(
             f"(last error: {last_error!r})")
         best = TuneResult(tn=heuristic_tn(plan, n, variant, batch),
                           source="heuristic")
-    _CACHE[key] = best
-    _bump_generation()
+    with _CACHE_LOCK:
+        _CACHE[key] = best
+        _bump_generation()
     return best
 
 
@@ -366,8 +379,9 @@ def autotune_plan(
     # the winner's key MUST be built by the same cache_key spelling that
     # resolve_tn/lookup consult — including the batched fields (a batched
     # sweep cached under a batch-less key would never be served again)
-    _CACHE[cache_key(best_plan, n, variant, batch=batch)] = best
-    _bump_generation()
+    with _CACHE_LOCK:
+        _CACHE[cache_key(best_plan, n, variant, batch=batch)] = best
+        _bump_generation()
     return best_plan, best
 
 
@@ -390,7 +404,9 @@ def save_cache(path: str) -> int:
             d["time_us"] = None
         return d
 
-    payload = {json.dumps(list(k)): _row(v) for k, v in _CACHE.items()}
+    with _CACHE_LOCK:       # snapshot: a concurrent tuned win must not
+        snap = list(_CACHE.items())   # resize the dict mid-iteration
+    payload = {json.dumps(list(k)): _row(v) for k, v in snap}
     tmp = f"{path}.tmp.{os.getpid()}"
     with open(tmp, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True, allow_nan=False)
@@ -424,33 +440,34 @@ def load_cache(path: str, *, merge: bool = True) -> int:
             f"selection falls back to the VMEM heuristic", RuntimeWarning,
             stacklevel=2)
         return 0
-    if not merge:
-        clear_cache()
     kept = 0
     bad = 0
-    for ks, vd in payload.items():
-        try:
-            key = tuple(json.loads(ks))
-            t = vd.get("time_us")
-            row = TuneResult(
-                tn=int(vd["tn"]),
-                block_rows=vd.get("block_rows"),
-                time_us=float(t) if t is not None else float("nan"),
-                source="loaded",
-            )
-        except (json.JSONDecodeError, ValueError, TypeError, KeyError,
-                AttributeError) as e:
-            bad += 1
-            health_report.record("tune.cache_corrupt",
-                                 detail=f"{path} entry {ks!r}: {e}")
-            continue
-        _CACHE[key] = row
-        kept += 1
+    with _CACHE_LOCK:   # replace-or-merge lands atomically w.r.t. readers
+        if not merge:
+            clear_cache()
+        for ks, vd in payload.items():
+            try:
+                key = tuple(json.loads(ks))
+                t = vd.get("time_us")
+                row = TuneResult(
+                    tn=int(vd["tn"]),
+                    block_rows=vd.get("block_rows"),
+                    time_us=float(t) if t is not None else float("nan"),
+                    source="loaded",
+                )
+            except (json.JSONDecodeError, ValueError, TypeError, KeyError,
+                    AttributeError) as e:
+                bad += 1
+                health_report.record("tune.cache_corrupt",
+                                     detail=f"{path} entry {ks!r}: {e}")
+                continue
+            _CACHE[key] = row
+            kept += 1
+        if kept:
+            _bump_generation()
     if bad:
         warnings.warn(
             f"tuner cache {path!r}: skipped {bad} malformed entr"
             f"{'y' if bad == 1 else 'ies'} (kept {kept})", RuntimeWarning,
             stacklevel=2)
-    if kept:
-        _bump_generation()
     return kept

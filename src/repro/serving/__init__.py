@@ -1,0 +1,35 @@
+"""Resilient sketch serving: deadline-aware batching over FlashSketch.
+
+The serving layer turns the guarded sketch stack into a multi-tenant
+service: concurrent ``sketch``/``solve`` requests are coalesced into
+single batched kernel launches, admission control bounds the queue and
+sheds load explicitly, overload degrades through a recorded ladder, and
+guard failures climb the PR-6 redraw ladder per request — budgeted
+against each request's deadline, with a per-(tenant, plan) circuit
+breaker bounding retry cost under sustained faults.  The contract is NO
+SILENT FAILURES: every request terminates in an explicit status, and any
+touched result carries a non-healthy ``HealthReport``.
+
+See ``docs/serving.md`` for the lifecycle, the coalescing rule, and the
+bench schema; ``benchmarks/serve_bench.py`` for the load/fault harness;
+``repro.launch.serve`` for the CLI.
+"""
+from repro.serving.admission import AdmissionController, AdmissionDecision
+from repro.serving.batcher import Batcher, Group, PlanCache, plan_key
+from repro.serving.breaker import CLOSED, HALF_OPEN, OPEN, CircuitBreaker
+from repro.serving.clock import ManualClock, MonotonicClock
+from repro.serving.degrade import (RUNGS, DegradeDecision, DegradeLadder)
+from repro.serving.request import (DEADLINE, DEGRADED, FAILED, OK,
+                                   REJECTED_STATUSES, SERVED_STATUSES, SHED,
+                                   TERMINAL_STATUSES, SketchRequest,
+                                   SketchResponse)
+from repro.serving.server import SERVE_POLICY, SketchServer, ThreadedServer
+
+__all__ = [
+    "AdmissionController", "AdmissionDecision", "Batcher", "Group",
+    "PlanCache", "plan_key", "CircuitBreaker", "CLOSED", "OPEN", "HALF_OPEN",
+    "ManualClock", "MonotonicClock", "DegradeDecision", "DegradeLadder",
+    "RUNGS", "SketchRequest", "SketchResponse", "OK", "DEGRADED", "FAILED",
+    "SHED", "DEADLINE", "TERMINAL_STATUSES", "SERVED_STATUSES",
+    "REJECTED_STATUSES", "SketchServer", "ThreadedServer", "SERVE_POLICY",
+]

@@ -11,3 +11,12 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_health_counters():
+    """Zero the process-global guard-event counters before every test, so
+    counter-delta assertions never depend on which tests ran earlier."""
+    from repro.health import report
+    report.reset_counters()
+    yield

@@ -50,7 +50,7 @@ def test_cost_models_are_ordered():
 def test_serve_generate_smoke():
     from repro.configs.base import smoke_config
     from repro.configs.registry import ARCHS
-    from repro.launch.serve import generate
+    from repro.launch.generate import generate
     from repro.models.factory import build_model, extra_inputs_concrete
 
     cfg = smoke_config(ARCHS["internlm2-1.8b"])
