@@ -78,6 +78,7 @@ FAMILY_KWARGS = {
     "srht": {},
     "blockperm": {"kappa": 4, "s": 2},
     "blockperm_bf16": {"kappa": 4, "s": 2},
+    "blockperm_fp8": {"kappa": 4, "s": 2},
     "localized": {"s": 2},
     "blockrow": {"kappa": 4, "s": 2},
     "countsketch": {},
@@ -86,7 +87,8 @@ FAMILY_KWARGS = {
 
 # BlockPerm's own ablation/precision variants — never counted as dominators
 # of "blockperm" (beating yourself is not losing the tournament).
-BLOCKPERM_KIN = ("blockperm", "blockperm_bf16", "localized")
+BLOCKPERM_KIN = ("blockperm", "blockperm_bf16", "blockperm_fp8",
+                 "localized")
 
 # The four reported axes (ALL lower-is-better) and the subset the gate
 # replays (the paper's figure axes).

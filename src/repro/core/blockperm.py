@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing, wiring
+from repro.core import precision as precision_mod
 
 
 def _next_pow2(x: int) -> int:
@@ -80,12 +81,19 @@ GATHER_VARIANTS = ("fwd_gather", "blockrow_gather")
 
 
 def fused_variant_bytes(kappa: int, Br: int, Bc: int, tn: int,
-                        itemsize: int = 4, variant: str = "fwd") -> int:
+                        itemsize: int = 4, variant: str = "fwd",
+                        phi_itemsize: Optional[int] = None) -> int:
     """v2 VMEM footprint of one kernel variant: stacked Φ scratch +
     double-buffered pipelined input blocks (or the row-gather scratch for
     the ``*_gather`` variants) + output tile.  Must track the
-    scratch/pipeline layout in kernels/flashsketch.py."""
-    phi = kappa * Br * Bc * itemsize
+    scratch/pipeline layout in kernels/flashsketch.py.
+
+    ``itemsize`` is the streamed-operand width (``precision.itemsize``);
+    ``phi_itemsize`` the Φ-scratch width, which differs under fp8
+    policies (Φ is held in the compute dtype the fp8 stream is upcast
+    to, ``precision.compute_itemsize``) — defaults to ``itemsize``."""
+    phi = kappa * Br * Bc * (itemsize if phi_itemsize is None
+                             else phi_itemsize)
     if variant == "transpose":
         ins = 2 * kappa * Br * tn * itemsize
         out = Bc * tn * 4
@@ -101,10 +109,11 @@ def fused_variant_bytes(kappa: int, Br: int, Bc: int, tn: int,
 
 
 def fused_working_set_bytes(kappa: int, Br: int, Bc: int, tn: int,
-                            itemsize: int = 4) -> int:
+                            itemsize: int = 4,
+                            phi_itemsize: Optional[int] = None) -> int:
     """Worst case of ``fused_variant_bytes`` over all kernel variants."""
     return max(
-        fused_variant_bytes(kappa, Br, Bc, tn, itemsize, v)
+        fused_variant_bytes(kappa, Br, Bc, tn, itemsize, v, phi_itemsize)
         for v in ("fwd", "transpose")
     )
 
@@ -141,9 +150,12 @@ class BlockPermPlan:
     seed: int
     a: int                 # wiring LCG multiplier
     b: int                 # wiring LCG offset
-    dtype: str = "float32"  # streaming dtype: "float32" or "bfloat16"
-                            # (accumulation is always fp32; bf16 halves the
-                            # HBM stream of A, justified by Jeendgar et al.)
+    dtype: str = "float32"  # streaming-precision POLICY (canonical name in
+                            # core.precision.POLICIES: "float32", "bfloat16",
+                            # "fp8_e4m3", "fp8_e5m2", "fp8_e4m3_sr",
+                            # "fp8_e5m2_sr"; accumulation is always fp32 —
+                            # low-precision streams justified by Jeendgar
+                            # et al., PAPERS.md arXiv 2606.20195)
     family: str = "blockperm"  # "blockperm" | "countsketch" | "graph";
                                # global families carry kappa == M (all-blocks
                                # wiring) and a k_pad-wide row partition.
@@ -160,13 +172,21 @@ class BlockPermPlan:
         return self.s if self.is_global else self.kappa * self.s
 
     @property
+    def precision(self) -> precision_mod.Precision:
+        """The resolved :class:`~repro.core.precision.Precision` record —
+        the single source for every dtype/itemsize/rounding/band question
+        about this plan's streaming policy."""
+        return precision_mod.resolve(self.dtype)
+
+    @property
     def stream_dtype(self):
         """jnp dtype the input is streamed in (accumulate is always fp32)."""
-        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+        return self.precision.stream_dtype
 
     @property
     def stream_itemsize(self) -> int:
-        return 2 if self.dtype == "bfloat16" else 4
+        """Bytes per streamed element (1 for fp8, 2 for bf16, 4 for fp32)."""
+        return self.precision.itemsize
 
     @property
     def scale(self) -> float:
@@ -195,18 +215,18 @@ class BlockPermPlan:
             f"nnz/col={self.nnz_per_col}, dtype={self.dtype}, seed={self.seed})"
         )
 
-    def with_dtype(self, dtype: str) -> "BlockPermPlan":
-        """Same sketch draw, different streaming precision."""
-        _check_dtype(dtype)
-        return dataclasses.replace(self, dtype=dtype)
+    def with_dtype(self, dtype) -> "BlockPermPlan":
+        """Same sketch draw, different streaming-precision policy.
+
+        Accepts a canonical policy name, a registered alias (``"fp32"``,
+        ``"bf16"``) or a :class:`~repro.core.precision.Precision` record;
+        the plan stores the canonical name (tuner-cache/snapshot-stable)."""
+        return dataclasses.replace(self, dtype=_check_dtype(dtype))
 
 
-_VALID_DTYPES = ("float32", "bfloat16")
-
-
-def _check_dtype(dtype: str) -> None:
-    if dtype not in _VALID_DTYPES:
-        raise ValueError(f"dtype must be one of {_VALID_DTYPES}, got {dtype!r}")
+def _check_dtype(dtype) -> str:
+    """Validate a streaming-precision policy; returns its canonical name."""
+    return precision_mod.canonical(dtype)
 
 
 def make_plan(
@@ -248,11 +268,15 @@ def make_plan(
         pin (``s`` does not divide the rounded value) raises
         ``ValueError`` instead of being silently clamped.
       max_block_rows: cap on the auto-chosen B_r.
-      dtype: streaming precision, ``"float32"`` (default) or
-        ``"bfloat16"``.  Controls only how kernels STREAM the input from
-        HBM (``plan.stream_dtype``) — Φ entries (±1/0) are exact in bf16
-        and accumulation is always fp32, so bf16 halves the dominant
-        memory term at a small rounding cost on A.  Anything else raises
+      dtype: streaming-precision policy — any name registered in
+        ``repro.core.precision`` (``"float32"`` default, ``"bfloat16"``,
+        ``"fp8_e4m3"``, ``"fp8_e5m2"``, ``"fp8_e4m3_sr"``,
+        ``"fp8_e5m2_sr"``; aliases ``"fp32"``/``"bf16"`` accepted and
+        canonicalized).  Controls only how kernels STREAM the input from
+        HBM (``plan.stream_dtype``, rounded per the policy's mode) —
+        Φ entries (±1/0) are exact in every policy and accumulation is
+        always fp32, so bf16 halves and fp8 quarters the dominant memory
+        term at a rounding cost on A.  Unknown policies raise
         ``ValueError``.
       family: ``"blockperm"`` (default), or a GLOBAL family —
         ``"countsketch"`` / ``"graph"``.  Global families place their s
@@ -270,7 +294,7 @@ def make_plan(
         raise ValueError("d and k must be positive")
     if kappa < 1 or s < 1:
         raise ValueError("kappa and s must be >= 1")
-    _check_dtype(dtype)
+    dtype = _check_dtype(dtype)
     if family not in FAMILIES:
         raise ValueError(f"family must be one of {FAMILIES}, got {family!r}")
 

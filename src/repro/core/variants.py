@@ -323,6 +323,21 @@ class BlockPermBf16Sketch(BlockPermSketch):
                          dtype="bfloat16", **kw)
 
 
+class BlockPermFp8Sketch(BlockPermSketch):
+    """fp8-streaming BLOCKPERM-SJLT (e4m3 + seeded stochastic rounding,
+    the ``fp8_e4m3_sr`` precision policy) registered as its own family:
+    1 byte/elem HBM streams — the ROADMAP-item-3 rung below bf16 — with
+    fp32 accumulate, labeled so precision rows never masquerade as the
+    fp32 "ours" in benchmark aggregation."""
+
+    name = "blockperm_fp8"
+
+    def __init__(self, d, k, kappa: int = 4, s: int = 2, seed: int = 0,
+                 impl: str = "auto", **kw):
+        super().__init__(d, k, kappa=kappa, s=s, seed=seed, impl=impl,
+                         dtype="fp8_e4m3_sr", **kw)
+
+
 class LocalizedSketch(BlockPermSketch):
     """κ=1 block-diagonal SJLT (Srinivasa et al. 2020) — paper's base case."""
 
@@ -435,6 +450,7 @@ SKETCH_FAMILIES = {
     "srht": SRHTSketch,
     "blockperm": BlockPermSketch,
     "blockperm_bf16": BlockPermBf16Sketch,
+    "blockperm_fp8": BlockPermFp8Sketch,
     "localized": LocalizedSketch,
     "blockrow": BlockRowSketch,
     "countsketch": CountSketch,

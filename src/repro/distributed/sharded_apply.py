@@ -235,10 +235,14 @@ def local_partial_apply(
         op="blockrow" if rows_pattern else "fwd", n=n, impl=impl, tn=tn,
         shard="row", devices=plan.M // M_loc))
     if lw.impl == "xla":
-        # match ops' xla path: the oracle sees the stream-rounded input
+        # match ops' xla path: the oracle sees the stream-rounded input —
+        # seeded precision emulation so stochastic-rounding policies stay
+        # bit-identical to the kernel's in-flight quantization
+        from repro.core import precision as precision_mod
         slab32 = slab.astype(jnp.float32)
         if plan.dtype != "float32":
-            slab32 = slab32.astype(plan.stream_dtype).astype(jnp.float32)
+            slab32 = precision_mod.emulate_stream(
+                slab32, plan.precision, seed=plan.seed)
         parts = _partial_oracle(plan, slab32, tables, rows_pattern)
     else:
         # ragged n is handled in-kernel — the slab is never column-padded

@@ -37,16 +37,21 @@ from typing import List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.core import precision as _precision
 from repro.health import report as _report
 from repro.health.report import DEGRADED, FAILED, HEALTHY, GuardFinding
 
-# Default thresholds (module-level so tests and docs reference one source).
-ISOMETRY_TOL = 0.5          # healthy band: ratio within 1 ± tol
-ISOMETRY_FAIL = 0.9         # failed band: ratio outside 1 ± fail
+# Default thresholds.  The isometry/OSE bands are single-sourced from the
+# fp32 precision policy (``core.precision``) — per-policy widened bands
+# (fp8) reach the guards via the keyword overrides, e.g.
+# ``isometry_guard(..., **plan.precision.isometry_band())``.
+_FP32 = _precision.resolve("float32")
+ISOMETRY_TOL = _FP32.isometry_tol     # healthy band: ratio within 1 ± tol
+ISOMETRY_FAIL = _FP32.isometry_fail   # failed band: ratio outside 1 ± fail
 RCOND_DEGRADED = 1.0e6      # diag-ratio estimate above this: degraded
 RCOND_FAILED = 1.0e12       # … above this (or 0/non-finite diag): failed
-OSE_MIN_HEALTHY = 0.5       # σ_min(SU) ≥ 1 − ε with the default ε = 1/2
-OSE_MIN_FAILED = 0.1        # a direction of range(A) essentially annihilated
+OSE_MIN_HEALTHY = _FP32.ose_min_healthy   # σ_min(SU) ≥ 1 − ε, default ε=1/2
+OSE_MIN_FAILED = _FP32.ose_min_failed     # a range(A) direction annihilated
 
 
 def concrete_or_none(x) -> Optional[np.ndarray]:

@@ -14,10 +14,14 @@ v2 (default) — fused-κ single-write formulation:
   * The stacked Φ lives in VMEM scratch and depends only on ``g`` — it is
     rebuilt only at ``j == 0`` and reused across all n/T_n column tiles,
     amortizing the s hash passes (VPU work) by a factor of n/T_n.
-  * Mixed precision: with ``plan.dtype == "bfloat16"`` the input streams
-    from HBM in bf16 and Φ is held in bf16 (entries ±1/0 are exact), while
-    the MXU accumulates in fp32 (``preferred_element_type``).  This halves
-    the dominant HBM term in the paper's d ≫ k regime.
+  * Mixed precision: the plan's ``Precision`` policy (core.precision)
+    decides the streaming cast — bf16 halves, fp8 quarters the HBM
+    stream of A; the ``*_sr`` fp8 policies apply seeded stochastic
+    rounding at the cast (``_stream``).  In-kernel, fp8 tiles upcast to
+    bf16 (exact) for the MXU and Φ is held in the compute dtype (entries
+    ±1/0 are exact in every policy), while the MXU accumulates in fp32
+    (``preferred_element_type``).  This shrinks the dominant HBM term in
+    the paper's d ≫ k regime.
 
 v2-gather (``*_gather``) — the same fused-κ formulation with the input row
 gather folded INTO the kernel: the operand stays in HBM (``pltpu.ANY``)
@@ -51,6 +55,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
+from repro.core import precision as precision_mod
 from repro.core.blockperm import GLOBAL_FAMILY_TAG, BlockPermPlan
 from repro.kernels import ref as kref
 
@@ -240,7 +245,9 @@ def _fused_fwd_kernel(tab_ref, *refs, plan: BlockPermPlan, scale, phi_fn):
 
     stacked = jnp.concatenate(
         [a_refs[ell][...] for ell in range(plan.kappa)], axis=0
-    )                                        # (κ·Bc, tn), streaming dtype
+    ).astype(phi_ref.dtype)    # (κ·Bc, tn): streamed dtype → MXU compute
+                               # dtype (no-op for fp32/bf16; fp8 upcasts
+                               # to bf16 — exact — inside VMEM)
     o_ref[...] = jnp.dot(
         phi_ref[...], stacked, preferred_element_type=jnp.float32
     ) * scale
@@ -264,7 +271,7 @@ def _fused_transpose_kernel(tab_ref, *refs, plan: BlockPermPlan, scale,
 
     stacked = jnp.concatenate(
         [y_refs[ell][...] for ell in range(plan.kappa)], axis=0
-    )                                        # (κ·Br, tn)
+    ).astype(phi_ref.dtype)                  # (κ·Br, tn), MXU compute dtype
     o_ref[...] = jnp.dot(
         phi_ref[...].T, stacked, preferred_element_type=jnp.float32
     ) * scale
@@ -363,7 +370,8 @@ def _fused_gather_kernel(tab_ref, rmap_ref, a_any, o_ref, gat_ref, phi_ref,
                 rows < plan.d, blk, jnp.zeros_like(blk))
 
     o_ref[...] = jnp.dot(
-        phi_ref[...], gat_ref[...], preferred_element_type=jnp.float32
+        phi_ref[...], gat_ref[...].astype(phi_ref.dtype),
+        preferred_element_type=jnp.float32,
     ) * scale
 
 
@@ -406,7 +414,8 @@ def _partial_fwd_kernel(tab_ref, a_ref, o_ref, phi_ref, *,
         phi_ref[...] = phi_fn(plan, g, h).astype(phi_ref.dtype)
 
     o_ref[0] = jnp.dot(
-        phi_ref[...], a_ref[...], preferred_element_type=jnp.float32
+        phi_ref[...], a_ref[...].astype(phi_ref.dtype),
+        preferred_element_type=jnp.float32,
     )
 
 
@@ -439,7 +448,8 @@ def _partial_masked_kernel(tab_ref, a_ref, o_ref, phi_ref, *,
         phi_ref[...] = jnp.zeros_like(phi_ref)
 
     o_ref[0] = jnp.dot(
-        phi_ref[...], a_ref[...], preferred_element_type=jnp.float32
+        phi_ref[...], a_ref[...].astype(phi_ref.dtype),
+        preferred_element_type=jnp.float32,
     )
 
 
@@ -504,7 +514,10 @@ def _run_fused(plan, kernel, tab, operand, in_block, out_block, phi_shape,
     operand is NEVER column-padded at trace level.
     """
     grid = (plan.M, -(-n // tn))
-    cdt = operand.dtype
+    # Φ scratch lives in the MXU compute dtype: identical to the streamed
+    # dtype for fp32/bf16, bf16 for the fp8 policies (whose operand tiles
+    # are upcast to it in-kernel; ±1/0 entries are exact either way).
+    cdt = plan.precision.compute_dtype
 
     def _gather_map(ell):
         return lambda g, j, tab_ref: (tab_ref[ell, g], j)
@@ -541,15 +554,18 @@ def _run_fused_gather(plan, kernel, tab, row_map, operand, out_block,
     """
     n_pad = ((n + tn - 1) // tn) * tn
     grid = (plan.M, n_pad // tn)
-    cdt = operand.dtype
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=pl.BlockSpec(out_block, lambda g, j, tab_ref, rmap_ref: (g, j)),
         scratch_shapes=[
-            pltpu.VMEM((plan.kappa * plan.Bc, tn), cdt),   # gather scratch
-            pltpu.VMEM((out_block[0], plan.kappa * plan.Bc), cdt),  # Φ*
+            # gather scratch holds the raw DMA'd rows — streamed dtype;
+            # Φ scratch holds the MXU compute dtype (gat tiles upcast to
+            # it at the contraction; identical dtypes except under fp8)
+            pltpu.VMEM((plan.kappa * plan.Bc, tn), operand.dtype),
+            pltpu.VMEM((out_block[0], plan.kappa * plan.Bc),
+                       plan.precision.compute_dtype),      # Φ*
             pltpu.SemaphoreType.DMA(()),
         ],
     )
@@ -563,8 +579,16 @@ def _run_fused_gather(plan, kernel, tab, row_map, operand, out_block,
 
 
 def _stream(plan: BlockPermPlan, operand: jnp.ndarray) -> jnp.ndarray:
-    """Cast the operand to the plan's streaming dtype (bf16 path)."""
-    return operand.astype(plan.stream_dtype)
+    """Quantize the operand into the plan's streaming dtype.
+
+    THE streaming cast (``core.precision.quantize_stream``): nearest
+    rounding for fp32/bf16/fp8 policies, seeded value-keyed stochastic
+    rounding for the ``*_sr`` fp8 policies (keyed on ``plan.seed`` so a
+    draw's quantization is as reproducible as its wiring).  The kernels
+    stream the result from HBM at ``plan.stream_itemsize`` bytes/elem and
+    upcast to ``plan.precision.compute_dtype`` in VMEM for the MXU."""
+    return precision_mod.quantize_stream(
+        operand, plan.precision, seed=plan.seed)
 
 
 def flashsketch_pallas(
@@ -776,7 +800,8 @@ def flashsketch_pallas_partial(
         grid=grid,
         in_specs=[in_spec],
         out_specs=pl.BlockSpec((1, plan.Br, tn), out_map),
-        scratch_shapes=[pltpu.VMEM((plan.Br, plan.Bc), operand.dtype)],
+        scratch_shapes=[pltpu.VMEM((plan.Br, plan.Bc),
+                                   plan.precision.compute_dtype)],
     )
     return pl.pallas_call(
         kernel,

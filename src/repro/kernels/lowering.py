@@ -47,6 +47,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import precision as precision_mod
 from repro.core.blockperm import (MIN_TILE_N, VMEM_BUDGET_BYTES,
                                   BlockPermPlan, fused_variant_bytes)
 from repro.health import report as health_report
@@ -75,8 +76,9 @@ class LaunchSpec:
         downgraded (recorded in ``Lowering.downgrade``).
       tn: requested column-tile width, or ``None`` to defer to the tuner
         cache / VMEM heuristic.
-      dtype: streaming-precision override (``"float32"``/``"bfloat16"``),
-        ``None`` keeps the plan's knob.
+      dtype: streaming-precision POLICY override — any name registered
+        in ``repro.core.precision`` (``"float32"``, ``"bfloat16"``, the
+        fp8 policies, or an alias); ``None`` keeps the plan's knob.
       gather: fuse a per-row gather into the kernel load (``fwd`` /
         ``blockrow`` only — the ``row_index=`` paths).
       batch: batched-apply fold factor (a B-stack folded into the column
@@ -228,7 +230,8 @@ def partial_vmem_bytes(plan: BlockPermPlan, tn: int) -> int:
     carries ONE Φ tile and ONE input block per program, regardless of the
     plan's κ)."""
     return fused_variant_bytes(1, plan.Br, plan.Bc, tn,
-                               plan.stream_itemsize, "fwd")
+                               plan.stream_itemsize, "fwd",
+                               plan.precision.compute_itemsize)
 
 
 def partial_fits_vmem(plan: BlockPermPlan, tn: int) -> bool:
@@ -452,7 +455,8 @@ def _lower(plan: BlockPermPlan, spec: LaunchSpec,
             vmem = v1_working_set_bytes(eff, tn)
         else:
             vmem = fused_variant_bytes(eff.kappa, eff.Br, eff.Bc, tn,
-                                       eff.stream_itemsize, variant)
+                                       eff.stream_itemsize, variant,
+                                       eff.precision.compute_itemsize)
         if not gather_fused:
             if spec.op == "transpose":
                 pad_rows = 0                      # plan.k == plan.k_pad
@@ -563,12 +567,13 @@ def explain(plan: BlockPermPlan, spec: Optional[LaunchSpec] = None,
 # ---------------------------------------------------------------------------
 
 def _emulate_stream(plan: BlockPermPlan, A: jnp.ndarray) -> jnp.ndarray:
-    """Round through the streaming dtype so the XLA oracle / fp32 v1
-    kernels see the same input precision the Pallas bf16 path streams
-    from HBM."""
+    """Round through the streaming precision so the XLA oracle / fp32 v1
+    kernels see the same input quantization the Pallas v2 path streams
+    from HBM (including the seeded stochastic rounding of the ``*_sr``
+    policies — value-keyed, so it matches the kernel cast bit-for-bit)."""
     if plan.dtype == "float32":
         return A
-    return A.astype(plan.stream_dtype).astype(jnp.float32)
+    return precision_mod.emulate_stream(A, plan.precision, seed=plan.seed)
 
 
 def row_map_for(plan: BlockPermPlan, row_index: jnp.ndarray) -> jnp.ndarray:

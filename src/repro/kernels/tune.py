@@ -135,7 +135,8 @@ def cache_size() -> int:
 
 def _vmem_footprint(plan: BlockPermPlan, tn: int, variant: str) -> int:
     return fused_variant_bytes(plan.kappa, plan.Br, plan.Bc, tn,
-                               plan.stream_itemsize, variant)
+                               plan.stream_itemsize, variant,
+                               plan.precision.compute_itemsize)
 
 
 def fused_fits_vmem(plan: BlockPermPlan, n: int, variant: str = "fwd") -> bool:

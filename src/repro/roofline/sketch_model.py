@@ -16,9 +16,10 @@ as ``max(MXU term, VPU term, HBM term)``:
     blocks).  v1's κ-revisiting grid reduction charges a read-modify-write
     of the fp32 output tile per revisit (``(2κ−1)·k_pad·n`` fp32 accesses,
     the semantics the paper ascribes to scatter-style sketches); v2 writes
-    each output tile exactly once.  With ``dtype="bfloat16"`` v2 halves
-    the input stream on top (fp32 accumulate in-register, per Jeendgar et
-    al. sketching is robust to this rounding).  v1 is fp32-only.
+    each output tile exactly once.  v2 streams the input at the plan's
+    precision-policy width on top — bf16 halves it, the fp8 policies
+    quarter it (1 byte/elem; fp32 accumulate in-register, per Jeendgar
+    et al. sketching is robust to this rounding).  v1 is fp32-only.
 
 These terms feed ``benchmarks/kernel_bench.py`` (modeled speedups alongside
 measured interpret-mode ones) and ``core.variants`` cost models.
@@ -118,8 +119,13 @@ def kernel_cost(
     if gather and variant == "transpose":
         raise ValueError("gather-fused loads exist for fwd/blockrow only")
     p = plan
-    # v1 predates the mixed-precision path: always streams fp32.
-    in_itemsize = p.stream_itemsize if version == "v2" else 4
+    # v1 predates the mixed-precision path: always streams fp32.  v2
+    # streams at the precision policy's width (1 B fp8, 2 B bf16, 4 B
+    # fp32) and feeds the MXU at the policy's compute width (fp8 upcasts
+    # to bf16 in VMEM — HBM pays 1 B/elem, the MXU runs at the bf16 rate).
+    prec = p.precision
+    in_itemsize = prec.itemsize if version == "v2" else 4
+    mxu_itemsize = prec.compute_itemsize if version == "v2" else 4
     n_eff = n * max(1, batch)
     n_tiles = max(1, (n_eff + tn - 1) // tn)
 
@@ -147,7 +153,7 @@ def kernel_cost(
         in_bytes = in_itemsize * in_elems
     hbm = in_bytes + 4.0 * out_accesses
 
-    peak = hw.PEAK_FLOPS_BF16 if in_itemsize == 2 else hw.PEAK_FLOPS_FP32
+    peak = hw.PEAK_FLOPS_BF16 if mxu_itemsize == 2 else hw.PEAK_FLOPS_FP32
     return KernelCost(mxu_flops=mxu, vpu_flops=vpu, hbm_bytes=hbm,
                       mxu_peak=peak)
 

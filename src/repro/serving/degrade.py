@@ -13,14 +13,21 @@ service is always visible, never silent:
   rung 2 ``dtype_bf16``  — stream the sketch operand in bfloat16 (half
          the HBM traffic, fp32 accumulate).  Changes low-order result
          bits → the response is flagged ``degraded``.
-  rung 3 ``cheap_lowering`` — re-lower the launch onto a structurally
+  rung 3 ``dtype_fp8``   — deepen the precision cut: stream in
+         fp8-e4m3 with seeded stochastic rounding (quarter HBM traffic,
+         still fp32 accumulate; the ``fp8_e4m3_sr`` policy of
+         ``core.precision``).  SUPERSEDES rung 2 — one dtype override
+         and one ``dtype`` finding per dispatch, naming the deepest
+         engaged precision rung.  Flagged ``degraded``.
+  rung 4 ``cheap_lowering`` — re-lower the launch onto a structurally
          cheaper sketch: κ halved (floor 1), i.e. half the operand
          streams, at the cost of embedding quality (the paper's δ/κ
          trade run toward speed).  Flagged ``degraded``.
 
-Rungs compose cumulatively (level 3 = all three).  Hysteresis: a rung
-engages at its high-water mark and releases only ``hysteresis`` below
-it, so the ladder does not flap at a threshold.
+Rungs compose cumulatively (level 4 = all four, with the dtype rungs
+collapsing to the deeper of the two).  Hysteresis: a rung engages at
+its high-water mark and releases only ``hysteresis`` below it, so the
+ladder does not flap at a threshold.
 """
 from __future__ import annotations
 
@@ -31,7 +38,11 @@ from repro.core.blockperm import BlockPermPlan, make_plan
 from repro.health import report as health_report
 from repro.health.report import DEGRADED, HEALTHY, GuardFinding
 
-RUNGS = ("shrink_wait", "dtype_bf16", "cheap_lowering")
+RUNGS = ("shrink_wait", "dtype_bf16", "dtype_fp8", "cheap_lowering")
+
+# the precision policy rung 3 lowers onto: fp8 stream + stochastic
+# rounding (unbiased across requests), fp32 accumulate
+FP8_RUNG_POLICY = "fp8_e4m3_sr"
 
 
 @dataclasses.dataclass
@@ -49,7 +60,7 @@ class DegradeDecision:
 class DegradeLadder:
     """Backpressure → ladder level, with hysteresis; level → decision."""
 
-    def __init__(self, *, thresholds=(0.5, 0.75, 0.9),
+    def __init__(self, *, thresholds=(0.5, 0.75, 0.85, 0.95),
                  hysteresis: float = 0.15):
         if len(thresholds) != len(RUNGS) or sorted(thresholds) != list(
                 thresholds):
@@ -91,13 +102,23 @@ class DegradeLadder:
                 threshold=batch_wait_s,
                 detail="rung 1: coalescing window collapsed under load "
                        "(result-identical)"))
-        if self.level >= 2 and plan.dtype != "bfloat16":
+        # rungs 2/3 are one knob at two depths: the deepest engaged rung
+        # wins, so each dispatch carries at most ONE dtype override and
+        # ONE ``dtype`` finding (counters stay one-per-dispatch)
+        if self.level >= 3 and plan.precision.name != FP8_RUNG_POLICY:
+            dtype = FP8_RUNG_POLICY
+            findings.append(GuardFinding(
+                "degrade", "dtype", DEGRADED,
+                detail="rung 3: operand streamed in fp8-e4m3 with "
+                       "stochastic rounding (fp32 accumulate) to quarter "
+                       "HBM traffic"))
+        elif self.level >= 2 and plan.dtype != "bfloat16":
             dtype = "bfloat16"
             findings.append(GuardFinding(
                 "degrade", "dtype", DEGRADED,
                 detail="rung 2: operand streamed in bf16 (fp32 "
                        "accumulate) to halve HBM traffic"))
-        if self.level >= 3 and not plan.is_global and plan.kappa > 1:
+        if self.level >= 4 and not plan.is_global and plan.kappa > 1:
             cheap = make_plan(plan.d, plan.k_req,
                               kappa=max(1, plan.kappa // 2), s=plan.s,
                               seed=plan.seed, dtype=plan.dtype,
@@ -109,7 +130,7 @@ class DegradeLadder:
                 findings.append(GuardFinding(
                     "degrade", "lowering", DEGRADED, value=float(eff.kappa),
                     threshold=float(plan.kappa),
-                    detail=f"rung 3: re-lowered onto κ={eff.kappa} "
+                    detail=f"rung 4: re-lowered onto κ={eff.kappa} "
                            f"(from κ={plan.kappa}) — cheaper launch, "
                            f"weaker embedding"))
         for f in findings:

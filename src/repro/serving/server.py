@@ -10,7 +10,8 @@ Request lifecycle::
 
     submit ──► admission (bounded queue: shed / deadline-reject) ──► batcher
     batcher ──(window | max_batch | deadline pressure)──► group
-    group  ──► degrade ladder (wait → bf16 → cheap κ)  [recorded findings]
+    group  ──► degrade ladder (wait → bf16 → fp8+SR → cheap κ)
+               [recorded findings]
            ──► ONE sketch_apply_batched launch (tile resolved once, batched
                shape class)
            ──► per-request guards (finite, isometry on each output slice)

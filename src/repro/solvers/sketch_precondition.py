@@ -393,6 +393,7 @@ def sketch_precondition_lstsq(
     s: Optional[int] = None,
     seed: int = 0,
     dtype: str = "float32",
+    precision: Optional[object] = None,
     family: str = "blockperm",
     sampling_factor: float = 4.0,
     factorization: str = "qr",
@@ -414,6 +415,13 @@ def sketch_precondition_lstsq(
       kappa, s, seed, dtype: BlockPerm-SJLT knobs (see ``make_plan``);
         κ/s/dtype trade sketch speed against preconditioner quality, i.e.
         against LSQR iteration count.
+      precision: optional precision policy — a registered name/alias
+        (``"fp8_e4m3_sr"``, ``"bf16"``, ...) or a ``core.precision.Precision``
+        record.  Overrides ``dtype`` when given; the policy rides the plan,
+        so lower-precision streaming surfaces directly as a higher
+        ``.iterations`` count, and the guarded path reads its per-policy
+        isometry/OSE tolerance bands (fp8 draws are judged against the
+        widened fp8 bands, not the fp32 ones).
       family: sketch construction ("blockperm" | "countsketch" | "graph")
         — the preconditioning pipeline is family-parametric; the family
         rides the plan through every guard rung and re-sketch restart.
@@ -445,6 +453,11 @@ def sketch_precondition_lstsq(
       made visible (κ=1 sketches are fastest but precondition worst).
     """
     d, n = A.shape
+    if precision is not None:
+        from repro.core import precision as precision_mod
+        dtype = precision_mod.canonical(
+            precision.name if isinstance(precision, precision_mod.Precision)
+            else precision)
     if s is None:
         # unknown families fall through to make_plan/family_stream, whose
         # ValueError names the valid set
@@ -485,12 +498,17 @@ def sketch_precondition_lstsq(
     def draw_and_check(p):
         """Sketch + factor + guard verdict for one attempt's plan."""
         SA, R = ops.sketch_qr(p, A32, impl, factorization=factorization)
+        # judge the draw against ITS policy's tolerance bands — an fp8
+        # sketch that lands inside the widened fp8 band is a healthy fp8
+        # sketch, not a degraded fp32 one
         findings = [guards.finite_guard(SA, "SA"),
-                    guards.isometry_guard(A32, SA, "SA"),
+                    guards.isometry_guard(A32, SA, "SA",
+                                          **p.precision.isometry_band()),
                     guards.finite_guard(R, "R"),
                     guards.r_condition_guard(R, "R")]
         if probe:
-            findings.append(guards.ose_probe(p, A32, impl=impl))
+            findings.append(guards.ose_probe(p, A32, impl=impl,
+                                             **p.precision.ose_band()))
         findings = [f for f in findings if f is not None]
         for f in findings:
             rpt.add(f)

@@ -64,10 +64,13 @@ def _plans():
 def _grid():
     """The full decision grid: (plan-name, LaunchSpec kwargs) cases."""
     cases = []
-    # single-device product — op × impl × dtype × gather × batch × ragged-n
+    # single-device product — op × impl × dtype × gather × batch × ragged-n.
+    # The dtype axis walks the precision-policy registry: fp32 (None),
+    # bf16, and the two fp8 stream formats (stochastic-rounding e4m3 plus
+    # nearest e5m2), so every fp8 dispatch decision is snapshot-pinned.
     for op in lowering.OPS:
         for impl in lowering.IMPLS:
-            for dtype in (None, "bfloat16"):
+            for dtype in (None, "bfloat16", "fp8_e4m3_sr", "fp8_e5m2"):
                 for gather in (False, True):
                     if gather and op not in lowering.GATHER_OPS:
                         continue
@@ -82,7 +85,7 @@ def _grid():
     for plan_name in ("count", "graph"):
         for op in ("fwd", "transpose"):
             for impl in ("pallas", "xla"):
-                for dtype in (None, "bfloat16"):
+                for dtype in (None, "bfloat16", "fp8_e4m3_sr"):
                     for gather in (False, True):
                         if gather and op not in lowering.GATHER_OPS:
                             continue

@@ -1,0 +1,240 @@
+"""Tests for the precision-policy registry and the streaming quantizer.
+
+Three layers:
+
+  * registry — canonical names, aliases, single-sourced itemsize /
+    jnp-dtype / tolerance-band accessors, frozen-record semantics, and
+    the plan integration (``BlockPermPlan.precision``).
+  * stochastic rounding, the distributional property — over many seeds
+    ``E[quantize(x)] ≈ x`` for values strictly between fp8 grid points
+    (the property that makes SR the right rounding for iterative
+    refinement: quantization error averages out instead of biasing the
+    preconditioner).
+  * stochastic rounding, the determinism properties — bit-identical
+    output for a fixed seed regardless of array shape or element order
+    (value-keyed draws), exact passthrough on representable values, and
+    saturating clamp at the format edge (e4m3 overflow must never reach
+    the nan encoding).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import precision
+from repro.core.blockperm import make_plan
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contents_and_aliases():
+    assert set(precision.POLICIES) == {
+        "float32", "bfloat16", "fp8_e4m3", "fp8_e5m2",
+        "fp8_e4m3_sr", "fp8_e5m2_sr"}
+    assert precision.canonical("fp32") == "float32"
+    assert precision.canonical("bf16") == "bfloat16"
+    for name in precision.names():
+        p = precision.resolve(name)
+        assert precision.resolve(p) is p          # records resolve to self
+    with pytest.raises(ValueError, match="registered"):
+        precision.resolve("float16")
+
+
+def test_itemsize_and_dtypes_single_sourced():
+    cases = {
+        "float32": (4, jnp.float32, 4),
+        "bfloat16": (2, jnp.bfloat16, 2),
+        "fp8_e4m3": (1, jnp.float8_e4m3fn, 2),
+        "fp8_e5m2": (1, jnp.float8_e5m2, 2),
+        "fp8_e4m3_sr": (1, jnp.float8_e4m3fn, 2),
+        "fp8_e5m2_sr": (1, jnp.float8_e5m2, 2),
+    }
+    for name, (itemsize, stream_dtype, compute_itemsize) in cases.items():
+        p = precision.resolve(name)
+        assert p.itemsize == itemsize
+        assert p.stream_dtype == stream_dtype
+        assert p.compute_itemsize == compute_itemsize
+        assert p.accum_dtype == jnp.float32       # every policy: fp32 accum
+        # fp8 upcasts to bf16 in-kernel; wider policies feed the MXU as-is
+        assert p.compute_dtype == (jnp.bfloat16 if p.is_fp8
+                                   else stream_dtype)
+
+
+def test_fp8_bands_widened_not_hardcoded():
+    fp32 = precision.resolve("float32")
+    for name in ("fp8_e4m3", "fp8_e5m2", "fp8_e4m3_sr", "fp8_e5m2_sr"):
+        p = precision.resolve(name)
+        assert p.isometry_tol > fp32.isometry_tol
+        assert p.isometry_fail > fp32.isometry_fail
+        assert p.ose_min_healthy < fp32.ose_min_healthy
+        assert p.ose_min_failed < fp32.ose_min_failed
+        assert p.exactness_atol > fp32.exactness_atol
+        assert set(p.isometry_band()) == {"tol", "fail"}
+        assert set(p.ose_band()) == {"min_healthy", "min_failed"}
+
+
+def test_guard_defaults_sourced_from_fp32_policy():
+    from repro.health import guards
+    fp32 = precision.resolve("float32")
+    assert guards.ISOMETRY_TOL == fp32.isometry_tol
+    assert guards.ISOMETRY_FAIL == fp32.isometry_fail
+    assert guards.OSE_MIN_HEALTHY == fp32.ose_min_healthy
+    assert guards.OSE_MIN_FAILED == fp32.ose_min_failed
+
+
+def test_records_frozen_and_hashable():
+    p = precision.resolve("fp8_e4m3_sr")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.stream = "float32"
+    assert len({precision.resolve(n) for n in precision.names()}) == \
+        len(precision.POLICIES)
+
+
+def test_plan_carries_policy_and_validates():
+    plan = make_plan(256, 64, kappa=2, s=2, dtype="fp8_e4m3_sr")
+    assert plan.dtype == "fp8_e4m3_sr"            # canonicalized, stored
+    assert plan.precision is precision.resolve("fp8_e4m3_sr")
+    assert plan.stream_itemsize == 1
+    assert plan.stream_dtype == jnp.float8_e4m3fn
+    # aliases canonicalize at the plan boundary (cache keys stay stable)
+    assert make_plan(256, 64, dtype="bf16").dtype == "bfloat16"
+    assert plan.with_dtype("fp32").dtype == "float32"
+    with pytest.raises(ValueError, match="registered"):
+        make_plan(256, 64, dtype="float64")
+
+
+def test_fp8_max_matches_format_spec():
+    assert precision.fp8_max("fp8_e4m3") == 448.0
+    assert precision.fp8_max("fp8_e5m2") == 57344.0
+    with pytest.raises(ValueError):
+        precision.fp8_max("bfloat16")
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding: distributional property
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["fp8_e4m3_sr", "fp8_e5m2_sr"])
+def test_sr_unbiased_over_seeds(policy):
+    """E[quantize(x)] ≈ x: averaging the quantizer over many seeds must
+    land within a small fraction of the local grid spacing (ulp) of the
+    true value — the defining property of stochastic rounding."""
+    p = precision.resolve(policy)
+    grid = np.asarray(precision._finite_grid(p.stream))
+    # strictly interior points at several magnitudes, incl. negatives
+    rng = np.random.default_rng(0)
+    lo_idx = rng.integers(1, grid.size - 2, size=16)
+    frac = rng.uniform(0.2, 0.8, size=16).astype(np.float32)
+    x = grid[lo_idx] + frac * (grid[lo_idx + 1] - grid[lo_idx])
+    ulp = grid[lo_idx + 1] - grid[lo_idx]
+
+    n_seeds = 1024
+    acc = np.zeros_like(x, dtype=np.float64)
+    for seed in range(n_seeds):
+        q = precision.quantize_stream(jnp.asarray(x), p, seed=seed)
+        acc += np.asarray(q.astype(jnp.float32), dtype=np.float64)
+    mean = acc / n_seeds
+    # CLT: sd of the mean ≤ 0.5·ulp/√n ≈ 0.016·ulp; 0.1·ulp is > 6 sigma
+    np.testing.assert_array_less(np.abs(mean - x), 0.1 * ulp)
+
+
+@pytest.mark.parametrize("policy", ["fp8_e4m3_sr", "fp8_e5m2_sr"])
+def test_sr_rounds_to_neighbors_only(policy):
+    """Every SR output is one of the value's two bracketing grid points."""
+    p = precision.resolve(policy)
+    grid = np.asarray(precision._finite_grid(p.stream))
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(512).astype(np.float32)
+    for seed in (0, 7):
+        q = np.asarray(precision.quantize_stream(
+            jnp.asarray(x), p, seed=seed).astype(jnp.float32))
+        lo_idx = np.clip(np.searchsorted(grid, x, side="right") - 1,
+                         0, grid.size - 2)
+        ok = (q == grid[lo_idx]) | (q == grid[lo_idx + 1])
+        assert ok.all()
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding: determinism properties
+# ---------------------------------------------------------------------------
+
+def test_sr_bit_deterministic_for_fixed_seed():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((32, 24)).astype(np.float32)
+    q1 = precision.quantize_stream(jnp.asarray(x), "fp8_e4m3_sr", seed=13)
+    q2 = precision.quantize_stream(jnp.asarray(x), "fp8_e4m3_sr", seed=13)
+    b1 = np.asarray(jnp.asarray(q1).view(jnp.uint8))
+    b2 = np.asarray(jnp.asarray(q2).view(jnp.uint8))
+    np.testing.assert_array_equal(b1, b2)
+    # a different seed really does draw differently somewhere
+    q3 = precision.quantize_stream(jnp.asarray(x), "fp8_e4m3_sr", seed=14)
+    assert not np.array_equal(np.asarray(jnp.asarray(q3).view(jnp.uint8)),
+                              b1)
+
+
+def test_sr_value_keyed_shape_and_order_invariant():
+    """The draw depends on the VALUE, not the position: reshaping or
+    permuting the array must quantize each element identically — the
+    property that keeps batched / loop / gather kernel organizations
+    bit-exact against the oracle."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(256).astype(np.float32)
+    flat = np.asarray(precision.quantize_stream(
+        jnp.asarray(x), "fp8_e4m3_sr", seed=5).astype(jnp.float32))
+    as_mat = np.asarray(precision.quantize_stream(
+        jnp.asarray(x.reshape(16, 16)), "fp8_e4m3_sr",
+        seed=5).astype(jnp.float32)).ravel()
+    perm = rng.permutation(256)
+    shuffled = np.asarray(precision.quantize_stream(
+        jnp.asarray(x[perm]), "fp8_e4m3_sr", seed=5).astype(jnp.float32))
+    np.testing.assert_array_equal(flat, as_mat)
+    np.testing.assert_array_equal(flat[perm], shuffled)
+
+
+@pytest.mark.parametrize("policy", ["fp8_e4m3", "fp8_e4m3_sr",
+                                    "fp8_e5m2", "fp8_e5m2_sr"])
+def test_exact_passthrough_on_representable_values(policy):
+    """Every finite fp8 value round-trips exactly — nearest AND
+    stochastic (frac = 0 at a grid point: nothing to draw)."""
+    p = precision.resolve(policy)
+    grid = np.asarray(precision._finite_grid(p.stream))
+    q = np.asarray(precision.quantize_stream(
+        jnp.asarray(grid), p, seed=9).astype(jnp.float32))
+    np.testing.assert_array_equal(q, grid)
+
+
+@pytest.mark.parametrize("policy", ["fp8_e4m3", "fp8_e4m3_sr"])
+def test_overflow_saturates_never_nan(policy):
+    """e4m3 has no inf: a plain astype of an out-of-range value produces
+    nan.  The streaming cast must clamp to ±448 instead."""
+    x = jnp.asarray(np.array([1e6, -1e6, 448.0, -448.0, 1e38, -1e38],
+                             dtype=np.float32))
+    q = np.asarray(precision.quantize_stream(
+        x, policy, seed=0).astype(jnp.float32))
+    assert np.isfinite(q).all()
+    np.testing.assert_array_equal(
+        q, np.array([448.0, -448.0, 448.0, -448.0, 448.0, -448.0]))
+
+
+def test_nearest_policies_ignore_seed():
+    x = jnp.asarray(np.linspace(-3, 3, 64, dtype=np.float32))
+    a = np.asarray(precision.quantize_stream(
+        x, "fp8_e4m3", seed=0).astype(jnp.float32))
+    b = np.asarray(precision.quantize_stream(
+        x, "fp8_e4m3", seed=99).astype(jnp.float32))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_emulate_stream_matches_quantize_and_fp32_identity():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal(128).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(precision.emulate_stream(x, "float32")), np.asarray(x))
+    for policy in ("bfloat16", "fp8_e4m3_sr"):
+        em = np.asarray(precision.emulate_stream(x, policy, seed=3))
+        q = np.asarray(precision.quantize_stream(
+            x, policy, seed=3).astype(jnp.float32))
+        np.testing.assert_array_equal(em, q)

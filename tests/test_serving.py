@@ -14,6 +14,7 @@ from repro.kernels import ops
 from repro.serving import (DEADLINE, DEGRADED, FAILED, OK, SHED,
                            CircuitBreaker, DegradeLadder, ManualClock,
                            SketchRequest, SketchServer, ThreadedServer)
+from repro.serving import degrade
 
 D, N, K = 128, 16, 32
 PARAMS = dict(d=D, k=K, kappa=2, s=2, seed=11)
@@ -135,14 +136,18 @@ def test_backpressure_and_degrade_ladder_recorded(rng):
     srv = _server(max_queue=8, max_batch=8)
     tickets = [srv.submit(_req(rng)) for _ in range(8)]
     assert srv.stats()["backpressure"] == 1.0
-    assert srv.ladder.level == 3
+    assert srv.ladder.level == len(degrade.RUNGS)      # every rung engaged
     srv.run_pending()                  # rung 1 collapses the window: due now
     resps = [srv.poll(t) for t in tickets]
     assert all(r is not None for r in resps)
     for r in resps:
-        assert r.status == DEGRADED    # bf16 rung is a real downgrade
-        assert any(f.guard == "degrade" and f.target == "dtype"
-                   for f in r.health.findings)
+        assert r.status == DEGRADED    # precision rung is a real downgrade
+        # the dtype rungs collapse to the deepest engaged one: exactly ONE
+        # dtype finding per response, and at full backpressure it is fp8
+        dtype_findings = [f for f in r.health.findings
+                         if f.guard == "degrade" and f.target == "dtype"]
+        assert len(dtype_findings) == 1
+        assert "fp8" in dtype_findings[0].detail
         assert r.flagged
     counts = health_report.counters()
     assert counts.get("serve.degrade.dtype") == 1      # once per dispatch

@@ -17,6 +17,14 @@ the exactness checks through the Pallas kernels (interpret mode off-TPU),
 so the battery exercises the real launch path, not just the oracle; the
 statistical checks use the default (fast) dispatch — they are properties
 of the sketch DISTRIBUTION, not of a kernel.
+
+Precision riders: ``blockperm_bf16`` / ``blockperm_fp8`` enroll in the
+family battery like any other registration, and a separate
+policy-parametrized block runs the isometry check against EACH policy's
+own tolerance band from ``core.precision`` — an fp8 draw is judged
+against the widened fp8 band, never the fp32 one.  Exactness
+comparisons against dense oracles read the per-policy
+``exactness_atol`` for the same reason.
 """
 import inspect
 
@@ -25,10 +33,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import precision
 from repro.core.variants import SKETCH_FAMILIES, make_sketch
+from repro.health import guards
 
 D, K, N = 96, 64, 24
 FAMILIES = sorted(SKETCH_FAMILIES)
+POLICIES = sorted(precision.POLICIES)
 
 
 def _accepts_impl(name: str) -> bool:
@@ -43,12 +54,21 @@ def _make(name: str, seed: int = 0, kernel: bool = False):
 
 
 def _emulate_stream(sk, A: jnp.ndarray) -> jnp.ndarray:
-    """Round A through the family's streaming dtype (bf16 families), so
+    """Round A through the family's streaming policy (seeded, so the
+    stochastic-rounding families reproduce the kernel's exact draws), so
     dense-oracle comparisons see the precision the kernel streams at."""
     plan = getattr(sk, "plan", None)
-    if plan is not None and plan.dtype != "float32":
-        return A.astype(plan.stream_dtype).astype(jnp.float32)
-    return A
+    if plan is None:
+        return A
+    return precision.emulate_stream(A, plan.precision, seed=plan.seed)
+
+
+def _atol(sk, default: float = 5e-4) -> float:
+    """Oracle-comparison tolerance: the family's policy band, not fp32's."""
+    plan = getattr(sk, "plan", None)
+    if plan is None:
+        return default
+    return max(default, plan.precision.exactness_atol)
 
 
 def _dense_S(sk) -> jnp.ndarray:
@@ -119,7 +139,7 @@ def test_vjp_round_trip_vs_dense_oracle(family, rng):
     # bf16-streaming families round the cotangent at the kernel boundary
     want = S.T @ _emulate_stream(sk, ct)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=0, atol=5e-4)
+                               rtol=0, atol=_atol(sk))
 
 
 @pytest.mark.parametrize("family", FAMILIES)
@@ -156,3 +176,41 @@ def test_batched_apply_matches_loop(family, rng):
     got = np.asarray(sk.apply_batched(A))
     want = np.stack([np.asarray(sk.apply(A[b])) for b in range(3)])
     np.testing.assert_allclose(got, want, rtol=0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# precision-policy conformance: each policy judged against ITS OWN band
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_isometry_within_policy_band(policy, rng):
+    """The Frobenius ratio of a policy-streamed sketch must sit inside
+    that policy's OWN isometry band — the fp8 rows pass the widened fp8
+    band (they are healthy fp8 sketches), and the guard invoked with the
+    per-policy kwargs agrees."""
+    p = precision.resolve(policy)
+    A = jnp.asarray(rng.normal(size=(D, N)), jnp.float32)
+    for seed in (0, 1, 2):
+        sk = make_sketch("blockperm", D, K, kappa=2, s=2, seed=seed,
+                         dtype=policy, impl="pallas")
+        Y = sk.apply(A)
+        ratio = float(jnp.linalg.norm(Y) / jnp.linalg.norm(A))
+        assert abs(ratio - 1.0) < p.isometry_tol, (policy, seed, ratio)
+        finding = guards.isometry_guard(A, Y, "SA", **p.isometry_band())
+        assert finding.status == "healthy", (policy, seed, finding)
+
+
+@pytest.mark.parametrize("policy", ["fp8_e4m3", "fp8_e4m3_sr",
+                                    "fp8_e5m2", "fp8_e5m2_sr"])
+def test_fp8_kernel_matches_seeded_oracle(policy, rng):
+    """The Pallas launch of an fp8 plan equals the dense oracle applied
+    to the seeded stream-quantized operand, within the policy's
+    exactness band — the end-to-end statement that the kernel's
+    in-flight quantization IS ``precision.quantize_stream``."""
+    A = jnp.asarray(rng.normal(size=(D, N)), jnp.float32)
+    sk = make_sketch("blockperm", D, K, kappa=2, s=2, seed=4,
+                     dtype=policy, impl="pallas")
+    got = np.asarray(sk.apply(A))
+    S = _dense_S(sk)
+    want = np.asarray(S @ _emulate_stream(sk, A))
+    np.testing.assert_allclose(got, want, rtol=0, atol=_atol(sk))

@@ -26,6 +26,8 @@ import sys
 
 
 def main(argv=None) -> int:
+    from repro.core import precision
+
     ap = argparse.ArgumentParser(
         description="FlashSketch lowering decision trace")
     ap.add_argument("--d", type=int, required=True, help="input dim (rows)")
@@ -36,8 +38,9 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--block-rows", type=int, default=None,
                     help="pin B_r (make_plan block_rows=)")
-    ap.add_argument("--dtype", choices=["float32", "bfloat16"], default=None,
-                    help="streaming dtype override")
+    ap.add_argument("--dtype", choices=list(precision.names()), default=None,
+                    help="streaming-precision policy override (any "
+                         "registered core.precision policy or alias)")
     ap.add_argument("--op", choices=["fwd", "transpose", "blockrow"],
                     default="fwd")
     ap.add_argument("--impl",
